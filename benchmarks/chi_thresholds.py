@@ -1,0 +1,61 @@
+"""Paper Fig 12 + §4.6: calibrate the chi thresholds (tau0, tau1).
+
+chi = |sigma0 - sigma1| between consecutive chunk histograms. The paper
+picks tau0/tau1 = 5.18/9.69 on raw counts; our sigma is normalized
+(per-mille probabilities, chunk-size independent) so the absolute values
+differ — this benchmark reproduces the CURVE (CR drop from keeping stale
+codewords vs chi) and derives our defaults.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Codebook, np_dual_quantize, sigma_of
+from repro.core.huffman import NUM_SYMBOLS
+
+from .common import corpus, emit
+
+
+def run():
+    # build (histogram, sigma) per dataset at several error bounds => a
+    # pool of distributions with varying chi between pairs
+    pool = []
+    for name, arr in corpus():
+        vr = float(arr.max() - arr.min())
+        for rel in (3e-5, 1e-4, 3e-4, 1e-3):
+            codes, _, _ = np_dual_quantize(arr, rel * vr, min(arr.ndim, 3))
+            freqs = np.bincount(codes.reshape(-1), minlength=NUM_SYMBOLS)
+            pool.append((f"{name}@{rel:g}", freqs, sigma_of(freqs)))
+    rows = []
+    for i, (na, fa, sa) in enumerate(pool):
+        cb_a = Codebook.from_freqs(fa)
+        for nb, fb, sb in pool[i + 1:]:
+            chi = abs(sa - sb)
+            cb_b = Codebook.from_freqs(fb)
+            stale_bits = cb_a.mean_bits(fb)       # encode B with A's book
+            fresh_bits = cb_b.mean_bits(fb)
+            drop = 1 - fresh_bits / max(stale_bits, 1e-9)
+            rows.append(dict(pair=f"{na}->{nb}", chi=chi,
+                             cr_drop=drop))
+    chis = np.array([r["chi"] for r in rows])
+    drops = np.array([r["cr_drop"] for r in rows])
+    # binned mean-drop curve (the paper's Fig 12), then threshold crossings
+    order = np.argsort(chis)
+    chis_s, drops_s = chis[order], drops[order]
+    nbin = max(6, len(rows) // 20)
+    edges = np.array_split(np.arange(len(rows)), nbin)
+    curve = [(float(chis_s[idx].mean()), float(drops_s[idx].mean()))
+             for idx in edges if len(idx)]
+    xs = np.array([c for c, _ in curve])
+    ys = np.array([d for _, d in curve])
+    ys_mono = np.maximum.accumulate(ys)          # enforce monotone trend
+    tau0 = float(np.interp(0.05, ys_mono, xs))   # drop crosses 5%
+    tau1 = float(np.interp(0.25, ys_mono, xs))   # drop crosses 25%
+    emit("chi_thresholds", rows,
+         derived=f"tau0={tau0:.2f};tau1={tau1:.2f};"
+                 f"paper_raw_scale=5.18/9.69")
+    return rows, tau0, tau1
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Shared benchmark utilities: corpus cache, timing, CSV/JSON output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+SIZE = os.environ.get("REPRO_BENCH_SIZE", "small")
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+_corpus_cache: Dict[str, List[Tuple[str, np.ndarray]]] = {}
+
+
+def corpus(size: str = None):
+    from repro.data import fields as F
+    size = size or SIZE
+    if size not in _corpus_cache:
+        _corpus_cache[size] = F.sdrbench_proxy_corpus(seed=0, size=size)
+    return _corpus_cache[size]
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw):
+    """Returns (result, best_seconds)."""
+    best = float("inf")
+    result = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return result, best
+
+
+def emit(name: str, rows: List[Dict], us_per_call: float = 0.0,
+         derived: str = ""):
+    """Print the harness CSV line + dump detail JSON."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print(f"{name},{us_per_call:.1f},{derived}")
+    return rows

@@ -1,0 +1,73 @@
+"""Paper Fig 14 + Tables 4/5: CR and PSNR vs error bound, with lossless
+baselines (zlib best ~ Gzip, zlib-1 ~ LZ4-class) and the CPU-SZ oracle
+(exact per-chunk Huffman, no offline/adaptive shortcuts).
+
+Paper claims reproduced here:
+  * CEAZ CR within ~10% of CPU-SZ at matching error bounds;
+  * PSNR within ~3 dB of CPU-SZ, all >= 60 dB;
+  * lossless compressors stay < 2x on scientific floats;
+  * rate law: CR grows ~2x bitrate-shift per 10x eb (B' = B - log2 N).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+from repro.core import (CEAZ, CEAZConfig, default_offline_codebook,
+                        max_abs_err, psnr)
+
+from .common import corpus, emit, time_call
+
+EBS = (1e-3, 1e-4, 1e-5, 1e-6)
+
+
+def run():
+    offline_cb = default_offline_codebook()
+    rows = []
+    for name, arr in corpus():
+        raw = arr.tobytes()
+        for level, tag in ((1, "lz-fast(zlib1)"), (9, "gzip(zlib9)")):
+            comp, t = time_call(zlib.compress, raw, level, repeats=1)
+            rows.append(dict(dataset=name, codec=tag, eb=None,
+                             ratio=len(raw) / len(comp),
+                             throughput_mbs=len(raw) / t / 1e6))
+        vr = float(arr.max() - arr.min())
+        # chunk to 1/8 of the array so the adaptive policy actually runs
+        # (offline bridge on chunk 1, live rebuilds after) — matches the
+        # paper's streaming setting rather than one-shot encoding
+        chunk = max(arr.nbytes // 8, 1 << 16)
+        for eb in EBS:
+            ceaz = CEAZ(CEAZConfig(mode="rel", eb=eb, chunk_bytes=chunk),
+                        offline_codebook=offline_cb)
+            sz = CEAZ(CEAZConfig(mode="rel", eb=eb, adaptive=False,
+                                 exact_build=True, chunk_bytes=chunk),
+                      offline_codebook=offline_cb)
+            c1, t1 = time_call(ceaz.compress, arr, repeats=1)
+            c2, _ = time_call(sz.compress, arr, repeats=1)
+            rec = ceaz.decompress(c1)
+            rec2 = sz.decompress(c2)
+            rows.append(dict(
+                dataset=name, codec="CEAZ", eb=eb, ratio=c1.ratio(),
+                psnr=psnr(arr, rec),
+                maxerr_over_eb=max_abs_err(arr, rec) / (eb * vr),
+                throughput_mbs=arr.nbytes / t1 / 1e6))
+            rows.append(dict(dataset=name, codec="CPU-SZ(oracle)", eb=eb,
+                             ratio=c2.ratio(), psnr=psnr(arr, rec2)))
+    # summary: CEAZ vs oracle CR gap at 1e-4; PSNR gap
+    gaps, psnr_gaps = [], []
+    for name, _ in corpus():
+        ce = next(r for r in rows if r["dataset"] == name
+                  and r["codec"] == "CEAZ" and r["eb"] == 1e-4)
+        sz = next(r for r in rows if r["dataset"] == name
+                  and r["codec"] == "CPU-SZ(oracle)" and r["eb"] == 1e-4)
+        gaps.append(1 - ce["ratio"] / sz["ratio"])
+        psnr_gaps.append(abs(ce["psnr"] - sz["psnr"]))
+    emit("ratio_distortion", rows,
+         derived=f"cr_gap_vs_sz@1e-4={max(gaps):.1%}(paper<10%);"
+                 f"max_psnr_gap={max(psnr_gaps):.2f}dB(paper<3dB)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(mesh: str = None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+def table(mesh: str = "single"):
+    rows = []
+    for r in load_cells(mesh):
+        if r["status"] == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status="skipped", reason=r["reason"]))
+            continue
+        if r["status"] != "ok":
+            rows.append(dict(arch=r["arch"], shape=r["shape"],
+                             status=r["status"],
+                             error=r.get("error", "")[:120]))
+            continue
+        rf = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], status="ok",
+            t_compute_ms=rf["t_compute_s"] * 1e3,
+            t_memory_ms=rf["t_memory_s"] * 1e3,
+            t_collective_ms=rf["t_collective_s"] * 1e3,
+            bound=rf["bound"],
+            useful_flops_ratio=r.get("useful_flops_ratio"),
+            peak_gb=(r["memory"].get("temp_bytes") or 0) / 1e9,
+        ))
+    return rows
+
+
+def run():
+    rows = table("single")
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    bad = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    emit("roofline_report", rows,
+         derived=f"ok={len(ok)};skipped={len(skipped)};failed={len(bad)}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in run():
+        print(row, file=sys.stderr)

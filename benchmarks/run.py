@@ -1,0 +1,43 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (and writes detail JSON under
+results/bench/). REPRO_BENCH_SIZE=medium scales the proxy datasets to
+benchmark-grade sizes.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (chi_thresholds, fixed_ratio, offline_codewords,
+                   parallel_io, ratio_distortion, roofline_report,
+                   sort_latency, symbol_hist, throughput, update_size)
+    suites = [
+        ("sort_latency(Fig6/Alg1)", sort_latency.run),
+        ("symbol_hist(Fig7)", symbol_hist.run),
+        ("offline_codewords(Fig10)", offline_codewords.run),
+        ("update_size(Fig11)", update_size.run),
+        ("chi_thresholds(Fig12)", chi_thresholds.run),
+        ("fixed_ratio(Fig13)", fixed_ratio.run),
+        ("ratio_distortion(Fig14/T4/T5)", ratio_distortion.run),
+        ("throughput(Fig15/16,T6/T7)", throughput.run),
+        ("parallel_io(Fig17)", parallel_io.run),
+        ("roofline_report(dry-run)", roofline_report.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception as e:
+            failures += 1
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

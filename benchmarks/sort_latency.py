@@ -1,0 +1,79 @@
+"""Paper Fig 6 / Algorithm 1: sort strategy inside codeword generation.
+
+Compares radix sort, merge sort (np.sort) and the paper's approximate
+two-pointer sort on 1024-bin histograms: wall time of the sort step, total
+codeword-generation time, and the compression-ratio cost of approximate
+ordering (paper: ~27% total-time saving, negligible CR loss).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Codebook, entropy_bits, np_dual_quantize
+from repro.core.approx_sort import approx_sorted_nonzero
+
+from .common import corpus, emit, time_call
+
+
+def _radix_sort_pairs(freqs):
+    """LSD radix sort on (freq, symbol) — the baseline the paper replaces."""
+    syms = np.arange(len(freqs), dtype=np.int64)
+    keys = freqs.astype(np.int64).copy()
+    order = np.arange(len(freqs))
+    for shift in range(0, 34, 8):                  # d digits, base 256
+        digit = (keys[order] >> shift) & 0xFF
+        order = order[np.argsort(digit, kind="stable")]
+    keep = freqs[order] > 0
+    return syms[order][keep], freqs[order][keep]
+
+
+def _merge_sort_pairs(freqs):
+    order = np.argsort(freqs, kind="mergesort")
+    keep = freqs[order] > 0
+    return order[keep], freqs[order][keep]
+
+
+def run():
+    rows = []
+    total_t = {}
+    for name, arr in corpus():
+        eb = 1e-4 * float(arr.max() - arr.min())
+        codes, _, _ = np_dual_quantize(arr, eb, min(arr.ndim, 3))
+        freqs = np.bincount(codes.reshape(-1), minlength=1024) + 1
+        for sort_name, fn in (("radix", _radix_sort_pairs),
+                              ("merge", _merge_sort_pairs),
+                              ("approx(paper)", approx_sorted_nonzero)):
+            (_, t_sort) = time_call(fn, freqs, repeats=20)
+            # total codeword generation = sort + two-queue build + canonize
+            def gen():
+                if sort_name == "approx(paper)":
+                    return Codebook.from_freqs(freqs, exact=False,
+                                               smoothing=False)
+                return Codebook.from_freqs(freqs, exact=True,
+                                           smoothing=False)
+            cb, t_total = time_call(gen, repeats=5)
+            mean_bits = cb.mean_bits(freqs)
+            rows.append(dict(dataset=name, sort=sort_name,
+                             sort_us=t_sort * 1e6, total_us=t_total * 1e6,
+                             mean_bits=mean_bits,
+                             entropy=entropy_bits(freqs)))
+            total_t.setdefault(sort_name, []).append(t_total)
+    sort_us = {k: np.mean([r["sort_us"] for r in rows if r["sort"] == k])
+               for k in ("radix", "merge", "approx(paper)")}
+    # the paper's 27% saving is on FPGA cycle counts of the WHOLE coder;
+    # host-side we report the sort-stage saving + the CR cost of
+    # approximate ordering (the paper's claim: negligible)
+    saving = 1 - sort_us["approx(paper)"] / sort_us["radix"]
+    cr_loss = (np.mean([r["mean_bits"] for r in rows
+                        if r["sort"] == "approx(paper)"])
+               / np.mean([r["mean_bits"] for r in rows
+                          if r["sort"] == "merge"]) - 1)
+    emit("sort_latency", rows,
+         us_per_call=float(np.mean(total_t["approx(paper)"])) * 1e6,
+         derived=f"sort_stage_saving_vs_radix={saving:.1%};"
+                 f"bits_overhead_vs_optimal={cr_loss:.2%}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

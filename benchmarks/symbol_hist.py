@@ -1,0 +1,46 @@
+"""Paper Fig 7: distribution of quant-code symbol frequencies.
+
+Verifies the two structural properties CEAZ exploits: (1) histograms are
+centred and ~symmetric around the middle symbol (what Algorithm 1's
+two-pointer sweep assumes); (2) their standard deviation is a usable
+distribution fingerprint (what the chi policy thresholds).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import np_dual_quantize, sigma_of
+from repro.core.dualquant import RADIUS
+
+from .common import corpus, emit
+
+
+def run():
+    rows = []
+    for name, arr in corpus():
+        eb = 1e-4 * float(arr.max() - arr.min())
+        codes, _, _ = np_dual_quantize(arr, eb, min(arr.ndim, 3))
+        freqs = np.bincount(codes.reshape(-1), minlength=1024)
+        nz = freqs > 0
+        center = int(np.argmax(freqs))
+        # symmetry: correlation between left and right wings
+        w = 100
+        left = freqs[RADIUS - w:RADIUS][::-1].astype(np.float64)
+        right = freqs[RADIUS + 1:RADIUS + 1 + w].astype(np.float64)
+        denom = np.linalg.norm(left) * np.linalg.norm(right)
+        sym = float(left @ right / denom) if denom > 0 else 1.0
+        rows.append(dict(dataset=name, mode_symbol=center,
+                         nonzero_symbols=int(nz.sum()),
+                         sigma=sigma_of(freqs), symmetry_corr=sym,
+                         mass_pm8=float(
+                             freqs[RADIUS - 8:RADIUS + 9].sum()
+                             / freqs.sum())))
+    worst_sym = min(r["symmetry_corr"] for r in rows)
+    emit("symbol_hist", rows,
+         derived=f"min_symmetry_corr={worst_sym:.3f};"
+                 f"all_centered={all(abs(r['mode_symbol'] - RADIUS) <= 1 for r in rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

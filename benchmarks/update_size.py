@@ -1,0 +1,50 @@
+"""Paper Fig 11: compression ratio vs codeword update size.
+
+Small update chunks pay codebook-storage overhead (size(codewords) is a
+fixed cost per rebuild); very large chunks let codewords go stale. The
+paper finds 32 MB optimal on their stream. We sweep chunk sizes over a
+heterogeneous stream (concatenated fields with drifting statistics so
+staleness actually bites).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CEAZ, CEAZConfig, default_offline_codebook
+
+from .common import SIZE, corpus, emit
+
+
+def _stream():
+    """Concatenate normalized fields => statistics drift along the stream."""
+    parts = []
+    for name, arr in corpus():
+        a = arr.reshape(-1).astype(np.float32)
+        a = (a - a.min()) / max(a.max() - a.min(), 1e-30)
+        parts.append(a)
+    return np.concatenate(parts)
+
+
+def run():
+    stream = _stream()
+    offline_cb = default_offline_codebook()
+    sizes_mb = ([0.0625, 0.125, 0.25, 0.5, 1, 2, 4]
+                if SIZE == "small" else [1, 2, 4, 8, 16, 32, 64, 128])
+    rows = []
+    for mb in sizes_mb:
+        comp = CEAZ(CEAZConfig(mode="abs", eb=1e-4,
+                               chunk_bytes=int(mb * (1 << 20)),
+                               adaptive=False, exact_build=False),
+                    offline_codebook=offline_cb)
+        c = comp.compress(stream)
+        rows.append(dict(update_mb=mb, ratio=c.ratio(),
+                         n_chunks=len(c.chunks)))
+    best = max(rows, key=lambda r: r["ratio"])
+    emit("update_size", rows,
+         derived=f"best_update_mb={best['update_mb']};"
+                 f"cr_at_best={best['ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Cosmology-dump scenario (paper §3.3 + Fig 17): every rank periodically
+dumps its NYX-like field shard. With CEAZ on the I/O path the dump moves
+CR-times fewer bytes; fixed-ratio payloads are uniform (no size
+stragglers) and the deadline-gather tolerates slow ranks.
+
+    PYTHONPATH=src python examples/parallel_io_demo.py
+"""
+import time
+
+import numpy as np
+
+from repro.core import CEAZ, CEAZConfig
+from repro.data import fields
+from repro.io.collectives import DeadlineGather
+from repro.io.filewrite import parallel_compressed_write, parallel_read
+
+N_RANKS = 8
+
+print("== generating per-rank NYX-like shards ==")
+rng = np.random.default_rng(0)
+shards = [fields.nyx_proxy(seed=100 + r) for r in range(N_RANKS)]
+raw_mb = sum(s.nbytes for s in shards) / 1e6
+print(f"{N_RANKS} ranks x {shards[0].nbytes / 1e6:.1f} MB "
+      f"= {raw_mb:.1f} MB per snapshot")
+
+print("== parallel compressed dump (MPI_File_write analogue) ==")
+stats = parallel_compressed_write("/tmp/repro_io_demo", shards)
+print(f"  CR={stats['ratio']:.2f}x stored={stats['stored_bytes']/1e6:.1f}MB "
+      f"effective {stats['effective_mbs']:.0f} MB/s (CPU reference impl)")
+
+print("== restart read-back (checkpoint/restart analogue) ==")
+restored = parallel_read("/tmp/repro_io_demo")
+eb = 1e-4 * (shards[0].max() - shards[0].min())
+ok = all(np.abs(a - b).max() <= eb * (b.max() - b.min()) / (shards[0].max() - shards[0].min()) * 1.01 + eb
+         for a, b in zip(restored, shards))
+maxerr = max(float(np.abs(a - b).max()) for a, b in zip(restored, shards))
+print(f"  all shards within error bound: max|err|={maxerr:.2e}")
+
+print("== straggler-tolerant gather (MPI_Gather analogue) ==")
+comp = CEAZ(CEAZConfig(mode="fixed_ratio", target_ratio=8.0,
+                       chunk_bytes=1 << 18))
+payloads = [comp.compress(s) for s in shards]
+sizes = [p.nbytes() for p in payloads]
+print(f"  fixed-ratio payloads: {min(sizes)/1e6:.2f}..{max(sizes)/1e6:.2f}"
+      f" MB (uniform => no size-stragglers)")
+
+def make_fetcher(r):
+    def fetch():
+        if r == 3:                      # rank 3 is a straggler this round
+            time.sleep(0.3)
+        return np.frombuffer(b"\0" * 8, np.uint8)  # stand-in payload bytes
+    return fetch
+
+dg = DeadlineGather(deadline_s=0.25)
+dg.gather([make_fetcher(r) for r in range(N_RANKS)])       # warm round
+_, dropped = dg.gather([make_fetcher(r) for r in range(N_RANKS)])
+print(f"  deadline gather round 2: {dropped} rank(s) backfilled "
+      f"(bounded staleness), stats={dg.stats}")

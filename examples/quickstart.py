@@ -1,0 +1,38 @@
+"""Quickstart: CEAZ error-bounded + fixed-ratio compression in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import CEAZ, CEAZConfig, max_abs_err, psnr
+from repro.data import fields
+
+# a CESM-like 2-D climate field (SDRBench proxy)
+field = fields.cesm_proxy(seed=7)
+vrange = float(field.max() - field.min())
+
+# --- error-bounded mode: |x - x_hat| <= 1e-4 * value_range, guaranteed ---
+comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4))
+c = comp.compress(field)
+recon = comp.decompress(c)
+print(f"error-bounded: CR={c.ratio():.2f}x  PSNR={psnr(field, recon):.1f}dB "
+      f"max|err|/eb={max_abs_err(field, recon) / (1e-4 * vrange):.3f}")
+print(f"  adaptive codeword actions per chunk: "
+      f"{[ch.action for ch in c.chunks]}")
+
+# --- fixed-ratio mode: payload size is a *static* function of input ---
+fr = CEAZ(CEAZConfig(mode="fixed_ratio", target_ratio=10.5,
+                     chunk_bytes=1 << 17))
+c2 = fr.compress(field)
+r2 = fr.decompress(c2)
+print(f"fixed-ratio:   target=10.5x actual={c2.ratio():.2f}x "
+      f"PSNR={psnr(field, r2):.1f}dB")
+
+# --- the Pallas kernel path (TPU target, interpret-mode on CPU) ---
+import jax.numpy as jnp
+from repro.kernels.dualquant import ops as dq
+
+codes, outliers, delta = dq.dual_quantize(jnp.asarray(field), 1e-4 * vrange,
+                                          ndim=2)
+print(f"pallas dualquant: {codes.shape} codes, "
+      f"{int(outliers.sum())} outliers")

@@ -1,0 +1,65 @@
+"""End-to-end training driver: reduced gemma3 on synthetic data with
+compressed checkpointing, preemption-safe loop, and (on a multi-device
+mesh) CEAZ-compressed cross-pod gradient exchange.
+
+    PYTHONPATH=src python examples/train_lm.py                 # 1 device
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/train_lm.py --mesh 2x2x2
+
+The loss curve is printed every 10 steps; a checkpoint lands in
+/tmp/repro_train_demo and the script demonstrates restart-from-checkpoint
+at the end (fault-tolerance path).
+"""
+import argparse
+import shutil
+
+from repro.configs import get_arch
+from repro.data.synthetic import DataConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch.train import TrainConfig, make_plan_for, train_loop
+from repro.optim import AdamWConfig, CompressionConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--mesh", default="")
+    ap.add_argument("--ckpt", default="/tmp/repro_train_demo")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.reduced()
+    mesh = None
+    if args.mesh:
+        dims = [int(x) for x in args.mesh.split("x")]
+        names = ("pod", "data", "model")[-len(dims):]
+        mesh = mesh_lib.make_mesh(dims, names)
+    plan = make_plan_for(cfg, mesh)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, global_batch=8,
+                          seq_len=64)
+    train_cfg = TrainConfig(opt=AdamWConfig(lr=1e-3, warmup_steps=20),
+                            comp=CompressionConfig(bits=8))
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    print(f"== training {cfg.name} ({args.steps} steps) ==")
+    state, hist = train_loop(cfg, data_cfg, train_cfg, plan,
+                             steps=args.steps, ckpt_dir=args.ckpt,
+                             ckpt_every=args.steps // 2)
+    first, last = hist[0][1], hist[-1][1]
+    print(f"loss {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'no progress'})")
+
+    print("== simulating restart from checkpoint ==")
+    from repro.checkpoint import ckpt as C
+    restored = C.restore_checkpoint(args.ckpt, plan=plan)
+    assert restored is not None
+    state2, meta = restored
+    print(f"restored step={meta['step']}; continuing 10 more steps")
+    train_loop(cfg, data_cfg, train_cfg, plan, steps=meta["step"] + 10,
+               ckpt_dir=args.ckpt, start_state=state2,
+               start_step=meta["step"])
+
+
+if __name__ == "__main__":
+    main()

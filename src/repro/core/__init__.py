@@ -1,0 +1,23 @@
+"""CEAZ core: the paper's contribution as a composable JAX/host library."""
+from .ceaz import CEAZ, CEAZCompressed, CEAZConfig, compress, decompress
+from .codebook import (AdaptiveCoder, build_offline_codebook,
+                       default_offline_codebook, min_update_bytes, sigma_of)
+from .dualquant import (NUM_SYMBOLS, OUTLIER_CODE, RADIUS, dequantize,
+                        dual_quantize, inverse_lorenzo, lorenzo_predict,
+                        np_dequantize, np_dual_quantize)
+from .huffman import Codebook, decode, encode, entropy_bits
+from .metrics import compression_ratio, max_abs_err, psnr, rmse
+from .ratecontrol import (FixedRatioController, bitrate_from_ratio,
+                          calibrate_eb_for_bitrate, predict_bitrate,
+                          predict_eb, ratio_from_bitrate)
+
+__all__ = [
+    "CEAZ", "CEAZCompressed", "CEAZConfig", "compress", "decompress",
+    "AdaptiveCoder", "build_offline_codebook", "default_offline_codebook",
+    "min_update_bytes", "sigma_of", "NUM_SYMBOLS", "OUTLIER_CODE", "RADIUS",
+    "dequantize", "dual_quantize", "inverse_lorenzo", "lorenzo_predict",
+    "np_dequantize", "np_dual_quantize", "Codebook", "decode", "encode",
+    "entropy_bits", "compression_ratio", "max_abs_err", "psnr", "rmse",
+    "FixedRatioController", "bitrate_from_ratio", "calibrate_eb_for_bitrate",
+    "predict_bitrate", "predict_eb", "ratio_from_bitrate",
+]

@@ -1,0 +1,354 @@
+"""CEAZ compressor facade: error-bounded + fixed-ratio streaming modes.
+
+Mirrors the engine of CEAZ Fig 4:
+
+  top path    — dual-quantization (N independent "pipelines" = Pallas grid
+                blocks / vectorized lanes) producing quant-code symbols;
+  middle path — symbols encoded immediately with the CURRENT codewords
+                (offline at stream start), packed into per-block bitstreams;
+  bottom path — per-chunk histogram -> chi policy decides keep / rebuild /
+                offline; in fixed-ratio mode the achieved bit-rate feeds the
+                error-bound controller for the next chunk.
+
+Two modes:
+  * 'abs' / 'rel' (error-bounded): one eb for the whole array, native-rank
+    Lorenzo prediction (best CR).
+  * 'fixed_ratio': the array is treated as a 1-D stream of chunks (exactly
+    what a NIC sees); eb adapts per chunk so the payload tracks the target
+    bit-rate => consistent throughput / static buffer sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from . import dualquant as dq
+from .codebook import (DEFAULT_TAU0, DEFAULT_TAU1, AdaptiveCoder,
+                       min_update_bytes, sigma_of)
+from .huffman import NUM_SYMBOLS, Codebook, encode, decode, entropy_bits
+from .metrics import compression_ratio
+from .ratecontrol import FixedRatioController, bitrate_from_ratio
+
+CHUNK_HEADER_BITS = 128
+BLOCK_COUNT_BITS = 32
+OUTLIER_BITS = 64          # 32-bit position + 32-bit delta
+
+
+@dataclasses.dataclass
+class CompressedChunk:
+    words: np.ndarray            # uint64 bitstream
+    block_nbits: np.ndarray      # int64 per block
+    n_values: int
+    eb: float
+    action: str                  # which codebook path was taken
+    chi: float
+    codebook_lengths: Optional[np.ndarray]   # shipped only when rebuilt
+    codebook_id: str
+    outlier_idx: np.ndarray      # chunk-local positions (int64)
+    outlier_delta: np.ndarray    # int32 deltas
+    center: int = 0              # value-direct mode: per-chunk centre code
+
+    def payload_bits(self) -> int:
+        return int(self.block_nbits.sum())
+
+    def total_bits(self) -> int:
+        bits = self.payload_bits()
+        bits += CHUNK_HEADER_BITS
+        bits += BLOCK_COUNT_BITS * len(self.block_nbits)
+        bits += OUTLIER_BITS * len(self.outlier_idx)
+        if self.codebook_lengths is not None:
+            bits += 5 * NUM_SYMBOLS
+        return bits
+
+
+@dataclasses.dataclass
+class CEAZCompressed:
+    shape: tuple
+    dtype: str
+    ndim: int                    # Lorenzo rank used
+    mode: str
+    chunks: List[CompressedChunk]
+    word_bits: int = 32
+    predictor: str = "lorenzo"   # 'lorenzo' | 'none' (value-direct)
+    # raw-literal channel: the rare points (~1e-5) where NO f32-rounded
+    # reconstruction level lies within eb (x halfway between two levels,
+    # both rounded outward). Patched after reconstruction; does not affect
+    # the integer prediction chain. SZ stores unpredictable points raw for
+    # the same reason.
+    literal_idx: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    literal_val: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float32))
+
+    def total_bits(self) -> int:
+        return (sum(c.total_bits() for c in self.chunks)
+                + OUTLIER_BITS * len(self.literal_idx))
+
+    @property
+    def n_values(self) -> int:
+        return int(np.prod(self.shape))
+
+    def ratio(self) -> float:
+        return compression_ratio(self.n_values * self.word_bits,
+                                 self.total_bits())
+
+    def bitrate(self) -> float:
+        return self.total_bits() / max(self.n_values, 1)
+
+    def nbytes(self) -> int:
+        return (self.total_bits() + 7) // 8
+
+
+@dataclasses.dataclass
+class CEAZConfig:
+    mode: str = "rel"                 # 'abs' | 'rel' | 'fixed_ratio'
+    eb: float = 1e-4                  # absolute or range-relative bound
+    target_ratio: float = 10.0        # fixed-ratio mode
+    chunk_bytes: int = 1 << 25        # paper Fig 11 optimum: 32 MB
+    block_size: int = 4096            # bitstream block (parallel decode unit)
+    tau0: float = DEFAULT_TAU0
+    tau1: float = DEFAULT_TAU1
+    exact_build: bool = False         # True => oracle Huffman (non-FPGA path)
+    adaptive: bool = True             # False => always rebuild ("online" bars)
+    backend: str = "numpy"            # 'numpy' | 'jax' | 'pallas'
+    predictor: str = "lorenzo"        # 'lorenzo' | 'none' | 'auto'
+    # 'none' quantizes values directly (noise-like data: weights/moments);
+    # 'auto' probes a sample chunk and picks the lower-entropy predictor
+
+
+class CEAZ:
+    def __init__(self, config: CEAZConfig | None = None,
+                 offline_codebook: Codebook | None = None, **kw):
+        if config is None:
+            config = CEAZConfig(**kw)
+        elif kw:
+            config = dataclasses.replace(config, **kw)
+        self.cfg = config
+        if offline_codebook is None:
+            from .codebook import default_offline_codebook
+            offline_codebook = default_offline_codebook()
+        self.offline = offline_codebook
+
+    # -- helpers -------------------------------------------------------------
+    def _abs_eb(self, x: np.ndarray) -> float:
+        if self.cfg.mode == "abs":
+            return self.cfg.eb
+        vrange = float(np.max(x) - np.min(x)) or 1.0
+        return self.cfg.eb * vrange
+
+    def _dual_quantize(self, x: np.ndarray, eb: float, ndim: int):
+        if self.cfg.backend == "pallas":
+            from ..kernels.dualquant import ops as dqops
+            import jax.numpy as jnp
+            codes, outlier, delta = dqops.dual_quantize(
+                jnp.asarray(x, jnp.float32), eb, ndim)
+            return (np.asarray(codes), np.asarray(outlier), np.asarray(delta))
+        if self.cfg.backend == "jax":
+            import jax.numpy as jnp
+            codes, outlier, delta = dq.dual_quantize(
+                jnp.asarray(x, jnp.float32), eb, ndim)
+            return (np.asarray(codes), np.asarray(outlier), np.asarray(delta))
+        return dq.np_dual_quantize(x, eb, ndim)
+
+    def _encode_chunk(self, codes_flat: np.ndarray, delta_flat: np.ndarray,
+                      outlier_flat: np.ndarray, eb: float,
+                      coder: AdaptiveCoder) -> CompressedChunk:
+        freqs = np.bincount(codes_flat, minlength=NUM_SYMBOLS)
+        if self.cfg.adaptive:
+            decision = coder.step(freqs)
+        else:
+            cb = Codebook.from_freqs(freqs, exact=self.cfg.exact_build)
+            from .codebook import AdaptiveDecision
+            decision = AdaptiveDecision("rebuild", 0.0, cb, True)
+        words, block_nbits, _ = encode(codes_flat, decision.codebook,
+                                       self.cfg.block_size)
+        oidx = np.flatnonzero(outlier_flat)
+        return CompressedChunk(
+            words=words, block_nbits=block_nbits, n_values=len(codes_flat),
+            eb=eb, action=decision.action, chi=decision.chi,
+            codebook_lengths=(decision.codebook.lengths.copy()
+                              if decision.stored_codebook else None),
+            codebook_id=decision.codebook.id,
+            outlier_idx=oidx.astype(np.int64),
+            outlier_delta=delta_flat[oidx].astype(np.int32))
+
+    # -- public API ------------------------------------------------------------
+    def _pick_predictor(self, x: np.ndarray, eb: float) -> str:
+        if self.cfg.predictor != "auto":
+            return self.cfg.predictor
+        from .huffman import entropy_bits as H
+        sample = x.reshape(-1)[:1 << 16]
+        c_l, o_l, _ = dq.np_dual_quantize(sample, eb, 1)
+        c_v, o_v, _, _ = dq.np_value_quantize(sample, eb)
+        cost_l = H(np.bincount(c_l, minlength=1024)) + 64 * o_l.mean()
+        cost_v = H(np.bincount(c_v, minlength=1024)) + 64 * o_v.mean()
+        return "lorenzo" if cost_l <= cost_v else "none"
+
+    def compress(self, x: np.ndarray) -> CEAZCompressed:
+        x = np.asarray(x)
+        if x.dtype not in (np.float32, np.float64):
+            raise TypeError(f"CEAZ compresses float data, got {x.dtype}")
+        word_bits = x.dtype.itemsize * 8
+        if self.cfg.mode in ("abs", "rel"):
+            pred = self._pick_predictor(x, self._abs_eb(x))
+            if pred == "none":
+                return self._compress_eb_direct(x, word_bits)
+            return self._compress_eb(x, word_bits)
+        if self.cfg.mode == "fixed_ratio":
+            return self._compress_fixed_ratio(x, word_bits)
+        raise ValueError(self.cfg.mode)
+
+    def _compress_eb_direct(self, x: np.ndarray,
+                            word_bits: int) -> CEAZCompressed:
+        """predictor='none': per-chunk value-direct quantization."""
+        flat = x.reshape(-1)
+        eb = self._abs_eb(x)
+        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
+                              self.cfg.exact_build)
+        cv = max(self.cfg.chunk_bytes // (word_bits // 8),
+                 self.cfg.block_size)
+        chunks, lit_idx, lit_val = [], [], []
+        for s in range(0, len(flat), cv):
+            e = min(s + cv, len(flat))
+            codes, outlier, delta, center = dq.np_value_quantize(flat[s:e],
+                                                                 eb)
+            ch = self._encode_chunk(codes.reshape(-1), delta.reshape(-1),
+                                    outlier.reshape(-1), eb, coder)
+            ch.center = center
+            rec = dq.np_value_dequantize(delta, center, eb, dtype=x.dtype)
+            viol = np.flatnonzero(
+                np.abs(rec.astype(np.float64)
+                       - flat[s:e].astype(np.float64)) > eb)
+            lit_idx.append(viol + s)
+            lit_val.append(flat[s:e][viol])
+            chunks.append(ch)
+        return CEAZCompressed(
+            shape=x.shape, dtype=str(x.dtype), ndim=1, mode=self.cfg.mode,
+            chunks=chunks, word_bits=word_bits, predictor="none",
+            literal_idx=np.concatenate(lit_idx).astype(np.int64),
+            literal_val=np.concatenate(lit_val))
+
+    def _compress_eb(self, x: np.ndarray, word_bits: int) -> CEAZCompressed:
+        ndim = min(x.ndim, 3)
+        work = x if x.ndim <= 3 else x.reshape((-1,) + x.shape[-2:])
+        eb = self._abs_eb(x)
+        codes, outlier, delta = self._dual_quantize(work, eb, ndim)
+        codes_f = codes.reshape(-1)
+        delta_f = delta.reshape(-1)
+        outl_f = outlier.reshape(-1)
+        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
+                              self.cfg.exact_build)
+        cv = max(self.cfg.chunk_bytes // (word_bits // 8), self.cfg.block_size)
+        chunks = []
+        for s in range(0, len(codes_f), cv):
+            e = min(s + cv, len(codes_f))
+            chunks.append(self._encode_chunk(codes_f[s:e], delta_f[s:e],
+                                             outl_f[s:e], eb, coder))
+        rec = dq.np_dequantize(delta, eb, ndim, dtype=x.dtype).reshape(-1)
+        viol = np.flatnonzero(np.abs(rec.astype(np.float64)
+                                     - x.reshape(-1).astype(np.float64)) > eb)
+        return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
+                              mode=self.cfg.mode, chunks=chunks,
+                              word_bits=word_bits,
+                              literal_idx=viol.astype(np.int64),
+                              literal_val=x.reshape(-1)[viol].copy())
+
+    def _compress_fixed_ratio(self, x: np.ndarray,
+                              word_bits: int) -> CEAZCompressed:
+        flat = x.reshape(-1)
+        target_b = bitrate_from_ratio(self.cfg.target_ratio, word_bits)
+        # seed eb via one-shot rate law on the first chunk sample
+        from .ratecontrol import calibrate_eb_for_bitrate
+        cv = max(self.cfg.chunk_bytes // (word_bits // 8), self.cfg.block_size)
+        sample = flat[:min(len(flat), cv)]
+        eb = calibrate_eb_for_bitrate(sample, target_b, 1)
+        ctrl = FixedRatioController(target_bitrate=target_b, eb=eb)
+        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
+                              self.cfg.exact_build)
+        chunks, lit_idx, lit_val = [], [], []
+        for s in range(0, len(flat), cv):
+            e = min(s + cv, len(flat))
+            codes, outlier, delta = self._dual_quantize(flat[s:e], ctrl.eb, 1)
+            ch = self._encode_chunk(codes, delta, outlier, ctrl.eb, coder)
+            rec = dq.np_dequantize(delta, ctrl.eb, 1, dtype=x.dtype)
+            viol = np.flatnonzero(np.abs(rec.astype(np.float64)
+                                         - flat[s:e].astype(np.float64))
+                                  > ctrl.eb)
+            lit_idx.append(viol + s)
+            lit_val.append(flat[s:e][viol])
+            chunks.append(ch)
+            achieved = ch.total_bits() / ch.n_values
+            ctrl.feedback(achieved)
+        return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=1,
+                              mode="fixed_ratio", chunks=chunks,
+                              word_bits=word_bits,
+                              literal_idx=np.concatenate(lit_idx).astype(np.int64),
+                              literal_val=np.concatenate(lit_val))
+
+    def decompress(self, c: CEAZCompressed) -> np.ndarray:
+        out_dtype = np.dtype(c.dtype)
+        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
+                              self.cfg.exact_build)
+        # replay the codebook sequence exactly as the encoder chose it
+        books: List[Codebook] = []
+        current = self.offline
+        for ch in c.chunks:
+            if ch.codebook_lengths is not None:
+                from .huffman import _canonize
+                lengths = ch.codebook_lengths.astype(np.int64)
+                current = Codebook(lengths=ch.codebook_lengths,
+                                   codes=_canonize(lengths))
+            elif ch.action == "offline":
+                current = self.offline
+            books.append(current)
+
+        if c.predictor == "none":
+            parts = []
+            for ch, cb in zip(c.chunks, books):
+                codes = decode(ch.words, ch.block_nbits, ch.n_values,
+                               self.cfg.block_size, cb)
+                d = codes.astype(np.int64) - dq.RADIUS
+                d[ch.outlier_idx] = ch.outlier_delta
+                parts.append(dq.np_value_dequantize(d, ch.center, ch.eb,
+                                                    dtype=out_dtype))
+            rec = np.concatenate(parts)
+            rec[c.literal_idx] = c.literal_val.astype(out_dtype)
+            return rec.reshape(c.shape)
+
+        if c.mode in ("abs", "rel"):
+            codes_parts, delta_parts = [], []
+            for ch, cb in zip(c.chunks, books):
+                codes = decode(ch.words, ch.block_nbits, ch.n_values,
+                               self.cfg.block_size, cb)
+                d = codes.astype(np.int64) - dq.RADIUS
+                d[ch.outlier_idx] = ch.outlier_delta
+                delta_parts.append(d)
+            delta = np.concatenate(delta_parts)
+            work_shape = (c.shape if len(c.shape) <= 3
+                          else (-1,) + c.shape[-2:])
+            delta = delta.reshape(work_shape)
+            rec = dq.np_dequantize(delta, c.chunks[0].eb, c.ndim,
+                                   dtype=out_dtype).reshape(-1)
+            rec[c.literal_idx] = c.literal_val.astype(out_dtype)
+            return rec.reshape(c.shape)
+
+        parts = []
+        for ch, cb in zip(c.chunks, books):
+            codes = decode(ch.words, ch.block_nbits, ch.n_values,
+                           self.cfg.block_size, cb)
+            d = codes.astype(np.int64) - dq.RADIUS
+            d[ch.outlier_idx] = ch.outlier_delta
+            parts.append(dq.np_dequantize(d, ch.eb, 1, dtype=out_dtype))
+        rec = np.concatenate(parts)
+        rec[c.literal_idx] = c.literal_val.astype(out_dtype)
+        return rec.reshape(c.shape)
+
+
+def compress(x, **kw) -> CEAZCompressed:
+    return CEAZ(**kw).compress(x)
+
+
+def decompress(c: CEAZCompressed, **kw) -> np.ndarray:
+    return CEAZ(**kw).decompress(c)

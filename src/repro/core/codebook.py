@@ -1,0 +1,166 @@
+"""Offline codebook generation + the adaptive online update policy.
+
+CEAZ §3.2.2–3.2.3: codeword generation is the slow serial path (two
+"necessary delays", Fig 2), so the stream starts on OFFLINE codewords
+(pre-built from representative scientific data whose error bounds were
+aligned with the rate law so their quant-code histograms match), and per
+chunk the coder decides — from the change of the standard deviation of
+symbol frequencies chi = |sigma0 - sigma1| — whether to keep, rebuild, or
+fall back:
+
+    chi <= tau0          keep previous codewords (distributions ~identical)
+    tau0 < chi <= tau1   rebuild codewords from the live histogram
+    chi >  tau1          drastic change: reset histogram, use OFFLINE codewords
+
+We additionally enforce the paper's codebook-storage-overhead rule
+(size(codewords) / size(compressed) <= ~10%, §3.2.3) via a minimum update
+size (default 32 MB, the paper's Fig 11 optimum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+from .dualquant import np_dual_quantize
+from .huffman import NUM_SYMBOLS, Codebook, entropy_bits
+from .ratecontrol import calibrate_eb_for_bitrate
+
+# sigma is computed on per-mille-normalized frequencies so thresholds are
+# independent of chunk size (the paper's raw-count thresholds 5.18/9.69 are
+# tied to their chunk size; ours are calibrated in benchmarks/chi_thresholds
+# — see EXPERIMENTS.md).
+SIGMA_SCALE = 1000.0
+DEFAULT_TAU0 = 2.3     # calibrated: benchmarks/chi_thresholds (5% CR-drop knee)
+DEFAULT_TAU1 = 8.0     # calibrated: 25% CR-drop knee (paper raw-count scale: 5.18/9.69)
+
+
+def sigma_of(freqs: np.ndarray) -> float:
+    """Std-dev of the normalized symbol-frequency distribution."""
+    freqs = np.asarray(freqs, dtype=np.float64)
+    total = freqs.sum()
+    if total <= 0:
+        return 0.0
+    return float(np.std(freqs / total * SIGMA_SCALE))
+
+
+@dataclasses.dataclass
+class AdaptiveDecision:
+    action: str            # 'keep' | 'rebuild' | 'offline'
+    chi: float
+    codebook: Codebook
+    stored_codebook: bool  # whether codebook bits must be shipped this chunk
+
+
+class AdaptiveCoder:
+    """Implements the 3-way chi policy over a stream of chunk histograms."""
+
+    def __init__(self, offline: Codebook, tau0: float = DEFAULT_TAU0,
+                 tau1: float = DEFAULT_TAU1, exact_build: bool = False):
+        self.offline = offline
+        self.tau0 = tau0
+        self.tau1 = tau1
+        self.exact_build = exact_build
+        self.current: Codebook = offline
+        self.prev_sigma: Optional[float] = None
+        self.warm = False        # True once live-built codewords are active
+        self.history: list[str] = []
+
+    def reset(self):
+        self.current = self.offline
+        self.prev_sigma = None
+        self.warm = False
+        self.history.clear()
+
+    def step(self, freqs: np.ndarray) -> AdaptiveDecision:
+        s1 = sigma_of(freqs)
+        if self.prev_sigma is None:
+            # stream start: paper encodes the first chunk with offline
+            # codewords while the histogram is still being collected
+            # (bridging the codeword-generation delay, Fig 2).
+            self.prev_sigma = s1
+            self.history.append("offline")
+            return AdaptiveDecision("offline", float("inf"), self.offline,
+                                    stored_codebook=False)
+        chi = abs(s1 - self.prev_sigma)
+        self.prev_sigma = s1
+        if chi > self.tau1:
+            # drastic distribution change: offline fallback + reset
+            self.current = self.offline
+            self.warm = False
+            self.history.append("offline")
+            return AdaptiveDecision("offline", chi, self.offline,
+                                    stored_codebook=False)
+        if chi > self.tau0 or not self.warm:
+            # rebuild from the live histogram; `not warm` forces the first
+            # build after an offline bridge even on a stable stream —
+            # offline codewords only cover the generation delay.
+            self.current = Codebook.from_freqs(freqs,
+                                               exact=self.exact_build)
+            self.warm = True
+            self.history.append("rebuild")
+            return AdaptiveDecision("rebuild", chi, self.current,
+                                    stored_codebook=True)
+        self.history.append("keep")
+        return AdaptiveDecision("keep", chi, self.current,
+                                stored_codebook=False)
+
+
+def min_update_bytes(target_ratio: float, word_bits: int = 32,
+                     codeword_bits: int = 8, overhead: float = 0.10) -> int:
+    """Paper §3.2.3: smallest chunk s.t. codebook storage <= `overhead` of
+    the compressed chunk:  S*B / (S*B + (W/C)*N_bits...)  =>  N values."""
+    sb = NUM_SYMBOLS * codeword_bits
+    n_values = int(np.ceil(sb * (1 - overhead) /
+                           (overhead * (word_bits / target_ratio))))
+    return n_values * (word_bits // 8)
+
+
+def build_offline_codebook(fields: Iterable[np.ndarray],
+                           target_bitrate: float = 4.0,
+                           exact: bool = True) -> Codebook:
+    """Offline codewords per paper §3.2.2.
+
+    (1) per dataset, pick eb aligning its bit-rate to `target_bitrate` via
+        the rate law (one-shot sampling — no trial-and-error);
+    (2) collect quant-code histograms; (3) average the NORMALIZED
+        histograms; build the codebook from the average.
+    """
+    acc = np.zeros(NUM_SYMBOLS, dtype=np.float64)
+    n_fields = 0
+    for f in fields:
+        f = np.asarray(f, dtype=np.float32)
+        ndim = min(f.ndim, 3)
+        if f.ndim > 3:
+            f = f.reshape((-1,) + f.shape[-2:])
+        eb = calibrate_eb_for_bitrate(f, target_bitrate, ndim)
+        codes, _, _ = np_dual_quantize(f, eb, ndim)
+        freqs = np.bincount(codes.reshape(-1), minlength=NUM_SYMBOLS)
+        acc += freqs / max(freqs.sum(), 1)
+        n_fields += 1
+    if n_fields == 0:
+        raise ValueError("no fields supplied")
+    avg = acc / n_fields
+    # integerize at high resolution so rare-symbol structure survives
+    freqs = np.round(avg * 1e7).astype(np.int64)
+    return Codebook.from_freqs(freqs, exact=exact)
+
+
+_DEFAULT_CODEBOOK: Optional[Codebook] = None
+
+
+def default_offline_codebook() -> Codebook:
+    """Offline codebook from the SDRBench-proxy corpus (see data/fields.py).
+
+    Shipped with the library the way CEAZ ships codewords generated from
+    SDRBench; regenerate with scripts in benchmarks/offline_codewords.py.
+    Cached module-wide (it is a constant of the library).
+    """
+    global _DEFAULT_CODEBOOK
+    if _DEFAULT_CODEBOOK is None:
+        from ..data import fields as F
+        corpus = F.sdrbench_proxy_corpus(seed=1234, size="small")
+        _DEFAULT_CODEBOOK = build_offline_codebook([a for _, a in corpus],
+                                                   target_bitrate=3.0)
+    return _DEFAULT_CODEBOOK

@@ -1,0 +1,93 @@
+"""Compression-ratio control: the paper's rate theory + fixed-ratio mode.
+
+CEAZ §3.2.2 derives that for Lorenzo + linear-scaling quantization the
+bit-rate after Huffman coding obeys
+
+    B(N * eb) = B(eb) - log2(N)                                   (Eq. 2)
+
+because scaling the error bound by N shrinks the quant-code histogram by N
+while keeping its *shape* (each probability mass merges N-to-1). This gives:
+
+  * one-shot error-bound selection: eb' = 2^(B - B_target) * eb after a
+    single sampling compression (used for offline codebook alignment);
+  * the fixed-ratio mode (CEAZ Fig 4 bottom path): a closed feedback loop
+    that nudges eb so the achieved bit-rate tracks the target — giving a
+    consistent payload size/throughput, which the FPGA needs for streaming
+    and which WE need for static shapes under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .huffman import entropy_bits
+
+
+def predict_eb(eb: float, bitrate: float, target_bitrate: float) -> float:
+    """eb' = 2^(B - B_target) * eb  (paper's one-shot rate law)."""
+    return eb * (2.0 ** (bitrate - target_bitrate))
+
+
+def predict_bitrate(bitrate: float, eb: float, new_eb: float) -> float:
+    """B' = B - log2(new_eb / eb)."""
+    return bitrate - np.log2(new_eb / eb)
+
+
+def bitrate_from_ratio(ratio: float, word_bits: int = 32) -> float:
+    return word_bits / ratio
+
+
+def ratio_from_bitrate(bitrate: float, word_bits: int = 32) -> float:
+    return word_bits / max(bitrate, 1e-9)
+
+
+@dataclasses.dataclass
+class FixedRatioController:
+    """Closed-loop error-bound controller for fixed-ratio mode.
+
+    `feedback()` consumes the achieved bit-rate of the chunk just encoded
+    and returns the error bound for the next chunk. The multiplicative
+    update is the exact inverse of the rate law; `damping` < 1 keeps the
+    loop stable on fields whose histogram shape drifts (where the law is
+    only locally exact).
+    """
+    target_bitrate: float
+    eb: float
+    damping: float = 0.7
+    min_eb: float = 1e-12
+    max_eb: float = 1e12
+
+    @classmethod
+    def from_target_ratio(cls, target_ratio: float, eb0: float,
+                          word_bits: int = 32, **kw) -> "FixedRatioController":
+        return cls(target_bitrate=bitrate_from_ratio(target_ratio, word_bits),
+                   eb=eb0, **kw)
+
+    def feedback(self, achieved_bitrate: float) -> float:
+        err = achieved_bitrate - self.target_bitrate      # positive => too many bits
+        self.eb = float(np.clip(self.eb * 2.0 ** (self.damping * err),
+                                self.min_eb, self.max_eb))
+        return self.eb
+
+
+def calibrate_eb_for_bitrate(sample: np.ndarray, target_bitrate: float,
+                             ndim: int, rel_eb0: float = 1e-4,
+                             iters: int = 2) -> float:
+    """One-shot (optionally refined) eb estimation from a sample block.
+
+    Compress-estimates entropy at a probe eb, then applies the rate law.
+    With iters>1, re-probes at the predicted eb (protects against the
+    histogram-shape drift at very large bounds the paper notes).
+    """
+    from .dualquant import np_dual_quantize  # local import to avoid cycle
+
+    sample = np.asarray(sample)
+    vrange = float(sample.max() - sample.min()) or 1.0
+    eb = rel_eb0 * vrange
+    for _ in range(iters):
+        codes, outlier, _ = np_dual_quantize(sample, eb, ndim)
+        freqs = np.bincount(codes.reshape(-1), minlength=1024)
+        b = entropy_bits(freqs) + 32.0 * outlier.mean()   # escape cost
+        eb = predict_eb(eb, b, target_bitrate)
+    return float(eb)

@@ -1,0 +1,1 @@
+from . import fields, synthetic  # noqa: F401

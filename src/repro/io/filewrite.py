@@ -1,0 +1,74 @@
+"""Parallel compressed file write: the paper's MPI_File_write scenario.
+
+Each rank compresses its shard with the full adaptive CEAZ pipeline and
+writes an independent segment; a manifest stitches the logical file. This
+is the cosmology-dump path (examples/parallel_io_demo.py) and shares the
+atomicity discipline of checkpoint/ckpt.py.
+"""
+from __future__ import annotations
+
+import concurrent.futures as futures
+import json
+import os
+import pickle
+import tempfile
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core import CEAZ, CEAZConfig
+
+
+def parallel_compressed_write(directory: str, shards: Sequence[np.ndarray],
+                              comp: Optional[CEAZ] = None,
+                              workers: int = 4) -> dict:
+    """Compress + write shards concurrently; returns timing/size stats."""
+    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4))
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_dump_")
+    t0 = time.perf_counter()
+
+    def write_one(i_shard):
+        i, shard = i_shard
+        t = time.perf_counter()
+        c = comp.compress(shard)
+        tc = time.perf_counter() - t
+        path = os.path.join(tmp, f"shard_{i:05d}.ceaz")
+        with open(path, "wb") as f:
+            pickle.dump(c, f, protocol=4)
+        return dict(rank=i, raw=shard.nbytes, stored=c.nbytes(),
+                    ratio=c.ratio(), compress_s=tc)
+
+    with futures.ThreadPoolExecutor(max_workers=workers) as ex:
+        stats = list(ex.map(write_one, enumerate(shards)))
+    manifest = {"n_shards": len(shards),
+                "dtype": str(shards[0].dtype),
+                "shapes": [list(s.shape) for s in shards],
+                "stats": stats}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    final = os.path.join(directory, "dump")
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    wall = time.perf_counter() - t0
+    raw = sum(s["raw"] for s in stats)
+    stored = sum(s["stored"] for s in stats)
+    return dict(wall_s=wall, raw_bytes=raw, stored_bytes=stored,
+                ratio=raw / stored,
+                effective_mbs=raw / wall / 1e6, shards=stats)
+
+
+def parallel_read(directory: str, comp: Optional[CEAZ] = None
+                  ) -> List[np.ndarray]:
+    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4))
+    d = os.path.join(directory, "dump")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out = []
+    for i in range(manifest["n_shards"]):
+        with open(os.path.join(d, f"shard_{i:05d}.ceaz"), "rb") as f:
+            out.append(comp.decompress(pickle.load(f)))
+    return out

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for CEAZ's compute hot spots.
+
+Four kernels, each a subpackage with kernel.py (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp
+oracle used by the allclose test sweeps):
+
+  dualquant  — fused prequantization + Lorenzo + postquantization
+  histogram  — 1024-bin quant-code histogram (one-hot partial sums)
+  hufenc     — Huffman encode: codebook gather + in-block bit packing
+  bitpack    — fixed-width b-bit pack/unpack (fixed-ratio collective path)
+
+All kernels run under interpret=True on CPU (validation) and are written
+with TPU tiling constraints (8x128 f32 / lane-dim multiples of 128).
+"""
+from . import bitpack, dualquant, histogram, hufenc  # noqa: F401
+
+__all__ = ["bitpack", "dualquant", "histogram", "hufenc"]

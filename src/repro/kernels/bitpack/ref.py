@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the bitpack kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def pack(vals: jax.Array, bits: int) -> jax.Array:
+    per = 32 // bits
+    v = vals.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    shifts = jnp.uint32(32) - jnp.uint32(bits) * (
+        jnp.arange(per, dtype=jnp.uint32) + 1)
+    contrib = v << shifts[None, :, None]
+    # OR-reduce == sum since fields don't overlap
+    return contrib.sum(axis=1).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def unpack(words: jax.Array, bits: int) -> jax.Array:
+    per = 32 // bits
+    shifts = jnp.uint32(32) - jnp.uint32(bits) * (
+        jnp.arange(per, dtype=jnp.uint32) + 1)
+    mask = jnp.uint32((1 << bits) - 1)
+    out = (words[:, None, :] >> shifts[None, :, None]) & mask
+    return out.astype(jnp.int32)

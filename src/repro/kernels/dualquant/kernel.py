@@ -1,0 +1,154 @@
+"""Pallas kernel: fused prequantization + Lorenzo prediction + postquant.
+
+TPU adaptation of CEAZ Fig 5. The FPGA instantiates N dual-quant pipelines
+streaming one value/cycle each; on TPU the analogue is a grid of VMEM
+tiles, each program instance transforming an (ROWS x COLS) tile with pure
+VPU element-wise ops — there is no loop-carried dependence (that is the
+whole point of dual-quantization), so every tile is independent.
+
+Two variants:
+  * 1-D stream (`dq1d`): data reshaped (rows, cols); Lorenzo along the
+    last axis with the WEST halo supplied by re-reading the input at a
+    shifted BlockSpec (same trick as FPGA line buffers). Row boundaries
+    reset prediction — rows are the "pipelines".
+  * 2-D field (`dq2d`): full 2-D Lorenzo with west/north/north-west halos
+    provided by three extra shifted views of the same operand, so the
+    kernel matches the GLOBAL 2-D Lorenzo semantics exactly.
+
+Scalars (error bound) are passed as a (1, 1) operand so changing eb does
+not recompile (on real TPU this lands in SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RADIUS = 512
+NUM_SYMBOLS = 1024
+
+# f32 native tile is (8, 128); use a few lanes' worth of columns per block.
+ROWS = 8
+COLS = 512
+
+
+def _prequant(x, eb):
+    q = jnp.rint(x / (2.0 * eb))
+    q = jnp.clip(q, -2.0e9, 2.0e9)
+    recon = (q * (2.0 * eb)).astype(jnp.float32)
+    err = x - recon
+    q = q + (err > eb).astype(q.dtype) - (err < -eb).astype(q.dtype)
+    return q.astype(jnp.int32)
+
+
+def _postquant(q, pred):
+    delta = q - pred
+    code = delta + RADIUS
+    outl = (code < 1) | (code >= NUM_SYMBOLS)
+    codes = jnp.where(outl, 0, code)
+    return codes.astype(jnp.int32), outl, delta
+
+
+def _dq1d_kernel(eb_ref, x_ref, xw_ref, codes_ref, outl_ref, delta_ref):
+    eb = eb_ref[0, 0]
+    j = pl.program_id(1)
+    x = x_ref[...]
+    q = _prequant(x, eb)
+    # west halo: last column of the previous column-block (zeros at j==0)
+    qw_halo = _prequant(xw_ref[...], eb)            # (ROWS, 1)
+    qw_halo = jnp.where(j == 0, 0, qw_halo)
+    pred = jnp.concatenate([qw_halo, q[:, :-1]], axis=1)
+    codes, outl, delta = _postquant(q, pred)
+    codes_ref[...] = codes
+    outl_ref[...] = outl.astype(jnp.int32)
+    delta_ref[...] = delta
+
+
+def _dq2d_kernel(eb_ref, x_ref, xw_ref, xn_ref, xnw_ref,
+                 codes_ref, outl_ref, delta_ref):
+    eb = eb_ref[0, 0]
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    x = x_ref[...]
+    q = _prequant(x, eb)
+    qw = jnp.where(j == 0, 0, _prequant(xw_ref[...], eb))     # (ROWS, 1)
+    qn = jnp.where(i == 0, 0, _prequant(xn_ref[...], eb))     # (1, COLS)
+    qnw = jnp.where((i == 0) | (j == 0), 0,
+                    _prequant(xnw_ref[...], eb))              # (1, 1)
+    # assemble the shifted-by-one neighbours with halos
+    west = jnp.concatenate([qw, q[:, :-1]], axis=1)
+    north = jnp.concatenate([qn, q[:-1, :]], axis=0)
+    nw_top = jnp.concatenate([qnw, qn[:, :-1]], axis=1)       # (1, COLS)
+    nw_body = jnp.concatenate([qw[:-1, :], q[:-1, :-1]], axis=1)
+    northwest = jnp.concatenate([nw_top, nw_body], axis=0)
+    pred = west + north - northwest
+    codes, outl, delta = _postquant(q, pred)
+    codes_ref[...] = codes
+    outl_ref[...] = outl.astype(jnp.int32)
+    delta_ref[...] = delta
+
+
+def _out_specs():
+    blk = (ROWS, COLS)
+    spec = pl.BlockSpec(blk, lambda i, j: (i, j))
+    return (spec, spec, spec)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dq1d(x: jax.Array, eb: jax.Array, *, interpret: bool = True):
+    """x: (rows, cols) f32, rows % ROWS == 0, cols % COLS == 0.
+
+    Lorenzo along axis 1 (each row an independent stream).
+    Returns (codes i32, outlier i32, delta i32) of the same shape.
+    """
+    rows, cols = x.shape
+    grid = (rows // ROWS, cols // COLS)
+    eb_arr = jnp.asarray(eb, jnp.float32).reshape(1, 1)
+    kernel = pl.pallas_call(
+        _dq1d_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((ROWS, COLS), lambda i, j: (i, j)),
+            # west halo: width-1 blocks => block index == element column
+            pl.BlockSpec((ROWS, 1), lambda i, j: (i, jnp.maximum(j * COLS - 1, 0))),
+        ],
+        out_specs=_out_specs(),
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return tuple(kernel(eb_arr, x, x))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dq2d(x: jax.Array, eb: jax.Array, *, interpret: bool = True):
+    """x: (rows, cols) f32 — GLOBAL 2-D Lorenzo via halo views."""
+    rows, cols = x.shape
+    grid = (rows // ROWS, cols // COLS)
+    eb_arr = jnp.asarray(eb, jnp.float32).reshape(1, 1)
+    kernel = pl.pallas_call(
+        _dq2d_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((ROWS, COLS), lambda i, j: (i, j)),
+            pl.BlockSpec((ROWS, 1), lambda i, j: (i, jnp.maximum(j * COLS - 1, 0))),
+            pl.BlockSpec((1, COLS), lambda i, j: (jnp.maximum(i * ROWS - 1, 0), j)),
+            pl.BlockSpec((1, 1), lambda i, j: (jnp.maximum(i * ROWS - 1, 0),
+                                               jnp.maximum(j * COLS - 1, 0))),
+        ],
+        out_specs=_out_specs(),
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return tuple(kernel(eb_arr, x, x, x, x))

@@ -1,0 +1,85 @@
+"""Public jit'd wrappers around the dualquant kernel (padding + reshaping).
+
+Two entry points with DIFFERENT prediction semantics (both faithful):
+
+  * `dual_quantize(x, eb, ndim)` — field compression path.
+    ndim==2 uses the Pallas kernel with halo views => EXACT global 2-D
+    Lorenzo (bit-identical to core.dualquant). ndim 1/3 fall back to the
+    pure-jnp core (global semantics) so the host decompressor's global
+    inverse always applies.
+
+  * `stream_quantize(x, eb, pipelines=64)` — streaming path (fixed-ratio
+    collectives). Data is laid out as `pipelines` independent rows, each
+    row a prediction stream (exactly the paper's N FPGA pipelines, which
+    also carry independent prediction contexts). Pair with
+    `stream_dequantize` — NOT with the global inverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import dualquant as core_dq
+from . import kernel as K
+
+
+def _pad2d(x, mr, mc):
+    r, c = x.shape
+    pr = (-r) % mr
+    pc = (-c) % mc
+    if pr or pc:
+        # edge-pad so padded cells quantize near their neighbours (no
+        # spurious outliers in the padded region)
+        x = jnp.pad(x, ((0, pr), (0, pc)), mode="edge")
+    return x, r, c
+
+
+def dual_quantize(x: jax.Array, eb, ndim: int, *, interpret: bool = True):
+    """Returns (codes i32, outlier bool, delta i32) with x's shape.
+
+    Global Lorenzo semantics for every ndim (kernel used when ndim==2).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if ndim == 2:
+        padded, r, c = _pad2d(x, K.ROWS, K.COLS)
+        codes, outl, delta = K.dq2d(padded, eb, interpret=interpret)
+        return (codes[:r, :c], outl[:r, :c].astype(bool), delta[:r, :c])
+    codes, outl, delta = core_dq.dual_quantize(x, float(eb), ndim)
+    return codes.astype(jnp.int32), outl, delta
+
+
+def _stream_layout(n: int, pipelines: int):
+    rows = pipelines
+    cols = -(-n // rows)
+    cols = -(-cols // K.COLS) * K.COLS          # multiple of COLS
+    rows = -(-rows // K.ROWS) * K.ROWS          # multiple of ROWS
+    return rows, cols
+
+
+def stream_quantize(x: jax.Array, eb, pipelines: int = 64,
+                    *, interpret: bool = True):
+    """Flat stream -> (codes, outlier, delta), row-local prediction.
+
+    Returns arrays flattened back to x's shape. Prediction resets
+    `pipelines` times across the stream (<= 64 escapes per array).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    rows, cols = _stream_layout(n, pipelines)
+    padded = jnp.pad(flat, (0, rows * cols - n), mode="edge")
+    padded = padded.reshape(rows, cols)
+    codes, outl, delta = K.dq1d(padded, eb, interpret=interpret)
+    unflat = lambda a: a.reshape(-1)[:n].reshape(x.shape)
+    return unflat(codes), unflat(outl).astype(bool), unflat(delta)
+
+
+def stream_dequantize(delta: jax.Array, eb, pipelines: int = 64):
+    """Inverse of `stream_quantize`: per-row cumsum then de-scale."""
+    flat = delta.reshape(-1)
+    n = flat.shape[0]
+    rows, cols = _stream_layout(n, pipelines)
+    d = jnp.pad(flat, (0, rows * cols - n)).reshape(rows, cols)
+    q = jnp.cumsum(d, axis=1, dtype=jnp.int32)
+    out = q.astype(jnp.float32) * (2.0 * jnp.asarray(eb, jnp.float32))
+    return out.reshape(-1)[:n].reshape(delta.shape)

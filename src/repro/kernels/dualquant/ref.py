@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the dualquant Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+RADIUS = 512
+NUM_SYMBOLS = 1024
+
+
+def _prequant(x, eb):
+    q = jnp.rint(x / (2.0 * eb))
+    q = jnp.clip(q, -2.0e9, 2.0e9)
+    recon = (q * (2.0 * eb)).astype(jnp.float32)
+    err = x - recon
+    q = q + (err > eb).astype(q.dtype) - (err < -eb).astype(q.dtype)
+    return q.astype(jnp.int32)
+
+
+def _postquant(q, pred):
+    delta = q - pred
+    code = delta + RADIUS
+    outl = (code < 1) | (code >= NUM_SYMBOLS)
+    codes = jnp.where(outl, 0, code)
+    return codes.astype(jnp.int32), outl.astype(jnp.int32), delta
+
+
+@jax.jit
+def dq1d(x: jax.Array, eb: jax.Array):
+    """Row-independent 1-D Lorenzo (rows are pipelines)."""
+    q = _prequant(x, jnp.asarray(eb, jnp.float32))
+    pred = jnp.pad(q, ((0, 0), (1, 0)))[:, :-1]
+    return _postquant(q, pred)
+
+
+@jax.jit
+def dq2d(x: jax.Array, eb: jax.Array):
+    """Global 2-D Lorenzo."""
+    q = _prequant(x, jnp.asarray(eb, jnp.float32))
+    w = jnp.pad(q, ((0, 0), (1, 0)))[:, :-1]
+    n = jnp.pad(q, ((1, 0), (0, 0)))[:-1, :]
+    nw = jnp.pad(q, ((1, 0), (1, 0)))[:-1, :-1]
+    return _postquant(q, w + n - nw)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the histogram kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NUM_SYMBOLS = 1024
+
+
+@jax.jit
+def histogram(codes: jax.Array) -> jax.Array:
+    flat = codes.reshape(-1)
+    return jnp.bincount(flat, length=NUM_SYMBOLS).astype(jnp.int32)

@@ -1,0 +1,98 @@
+"""Pallas kernel: Huffman encode (codebook gather + in-block bit packing).
+
+This is the stage the paper identifies as the post-dual-quant bottleneck
+(§2.4) and solves on FPGA with a streaming encoder. TPU adaptation:
+
+  * the 1024-entry canonical codebook (codeword values + lengths) is a
+    small operand every grid step maps to block (0, 0) — on real TPU it
+    lives in VMEM and is scalar-gathered (SMEM would also fit it);
+  * each program instance packs ONE block of `BLOCK` symbols into its own
+    bitstream via a fori_loop carrying (word index, bits-in-word,
+    accumulator) — serial per block, parallel ACROSS blocks. This is
+    exactly the FPGA structure: one pipeline = one serial bit packer, N
+    pipelines in parallel. Per-block bit counts come out alongside so
+    decode is block-parallel.
+
+Packing layout: MSB-first u32 words, one padded (BLOCK/2)-word row per
+block (worst case 16 bits/symbol); `nbits[b]` gives the valid bit count.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+BLOCK = 4096                   # symbols per block (bitstream unit)
+MAX_CODE_LEN = 16
+WORDS = BLOCK * MAX_CODE_LEN // 32   # 2048 u32 words, worst case
+_M32 = np.uint32(0xFFFFFFFF)         # numpy scalar => inlined literal
+
+
+def _hufenc_kernel(codes_ref, cw_ref, ln_ref, words_ref, nbits_ref):
+    words_ref[...] = jnp.zeros_like(words_ref)
+
+    def body(k, carry):
+        wi, bits, acc = carry
+        sym = codes_ref[0, k]
+        v = cw_ref[0, sym].astype(jnp.uint32)
+        ln = ln_ref[0, sym].astype(jnp.int32)
+        space = 32 - bits
+        fits = ln <= space
+        # path A (fits): append to accumulator
+        sh_fit = jnp.clip(space - ln, 0, 31).astype(jnp.uint32)
+        acc_fit = acc | ((v << sh_fit) & _M32)
+        full_fit = bits + ln == 32
+        # path B (split): top bits complete word wi, rest starts new acc
+        over = jnp.clip(ln - space, 1, 31).astype(jnp.uint32)
+        acc_split_done = acc | (v >> over)
+        acc_split_new = (v << (jnp.uint32(32) - over)) & _M32
+        # one store per iteration: the (possibly still partial) word at wi.
+        # Partial stores are overwritten on later iterations at the same wi;
+        # completed words are never revisited (wi strictly advances).
+        store_val = jnp.where(fits, acc_fit, acc_split_done)
+        words_ref[0, wi] = store_val
+        new_wi = wi + jnp.where(fits, full_fit.astype(jnp.int32), 1)
+        new_acc = jnp.where(fits, jnp.where(full_fit, jnp.uint32(0), acc_fit),
+                            acc_split_new)
+        new_bits = jnp.where(fits, jnp.where(full_fit, 0, bits + ln),
+                             ln - space)
+        return new_wi, new_bits, new_acc
+
+    wi, bits, acc = jax.lax.fori_loop(
+        0, BLOCK, body, (jnp.int32(0), jnp.int32(0), jnp.uint32(0)))
+    words_ref[0, wi] = acc                     # flush trailing partial word
+    nbits_ref[0, 0] = wi * 32 + bits
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hufenc(codes: jax.Array, codewords: jax.Array, lengths: jax.Array,
+           *, interpret: bool = True):
+    """codes: (nblocks, BLOCK) i32; codewords/lengths: (1024,) u32/i32.
+
+    Returns (words (nblocks, WORDS) u32, nbits (nblocks,) i32).
+    """
+    nblocks = codes.shape[0]
+    cw = codewords.reshape(1, -1).astype(jnp.uint32)
+    ln = lengths.reshape(1, -1).astype(jnp.int32)
+    words, nbits = pl.pallas_call(
+        _hufenc_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda b: (b, 0)),
+            pl.BlockSpec((1, cw.shape[1]), lambda b: (0, 0)),
+            pl.BlockSpec((1, ln.shape[1]), lambda b: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, WORDS), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, WORDS), jnp.uint32),
+            jax.ShapeDtypeStruct((nblocks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes, cw, ln)
+    return words, nbits[:, 0]

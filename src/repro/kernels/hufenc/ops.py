@@ -1,0 +1,50 @@
+"""Public wrapper: Huffman-encode a flat code array with a Codebook.
+
+Pads the tail block with symbol `pad_sym` (callers pass the most frequent
+symbol so the pad costs ~1 bit/value of the <1-block tail); returns the
+per-block packed words, per-block bit counts and the true symbol count so
+the host can trim/concatenate into the wire format.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as K
+
+
+def hufenc_flat(codes: jax.Array, codewords, lengths, pad_sym: int = 512,
+                *, interpret: bool = True
+                ) -> Tuple[jax.Array, jax.Array, int]:
+    flat = jnp.asarray(codes, jnp.int32).reshape(-1)
+    n = int(flat.shape[0])
+    nblocks = max(-(-n // K.BLOCK), 1)
+    padded = jnp.full((nblocks * K.BLOCK,), pad_sym, jnp.int32)
+    padded = padded.at[:n].set(flat).reshape(nblocks, K.BLOCK)
+    words, nbits = K.hufenc(padded, jnp.asarray(codewords),
+                            jnp.asarray(lengths), interpret=interpret)
+    return words, nbits, n
+
+
+def to_host_stream(words, nbits, n: int, lengths) -> Tuple[np.ndarray, int]:
+    """Concatenate per-block padded words into one contiguous u64 bitstream
+    compatible with core.huffman.decode (host path)."""
+    from ...core import huffman as H
+    words = np.asarray(words)
+    nbits = np.asarray(nbits)
+    # expand each block's valid bits into a bit array (host-side utility —
+    # used by tests and the checkpoint writer, not a hot path)
+    bits = []
+    for b in range(words.shape[0]):
+        nb = int(nbits[b])
+        w = words[b][: (nb + 31) // 32]
+        bb = np.unpackbits(w.astype(">u4").view(np.uint8))[:nb]
+        bits.append(bb)
+    allbits = np.concatenate(bits) if bits else np.zeros(0, np.uint8)
+    pad = (-len(allbits)) % 64
+    allbits = np.pad(allbits, (0, pad))
+    u64 = np.packbits(allbits).view(">u8").astype(np.uint64)
+    return np.concatenate([u64, np.zeros(1, np.uint64)]), int(nbits.sum())

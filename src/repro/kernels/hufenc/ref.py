@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the hufenc kernel: vectorized word-OR construction.
+
+Same output layout as the kernel (per-block MSB-first u32 words + bit
+counts) but built with cumsum offsets + segment sums instead of a serial
+loop — the two implementations are completely independent, which is what
+makes the allclose sweep meaningful.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+@jax.jit
+def hufenc(codes: jax.Array, codewords: jax.Array, lengths: jax.Array):
+    nblocks = codes.shape[0]
+    cw = codewords.astype(jnp.uint32)
+    ln = lengths.astype(jnp.int32)
+
+    def one_block(block_codes):
+        v = cw[block_codes]                          # (BLOCK,) u32
+        l = ln[block_codes]                          # (BLOCK,) i32
+        ends = jnp.cumsum(l)
+        starts = ends - l
+        total = ends[-1]
+        word = starts // 32
+        bitin = starts % 32
+        left = 32 - bitin - l                        # may be negative
+        ls = jnp.clip(left, 0, 31).astype(jnp.uint32)
+        rs = jnp.clip(-left, 0, 31).astype(jnp.uint32)
+        hi = jnp.where(left >= 0, (v << ls) & K._M32, v >> rs)
+        lo_sh = jnp.clip(32 + left, 0, 31).astype(jnp.uint32)
+        lo = jnp.where(left < 0, (v << lo_sh) & K._M32, jnp.uint32(0))
+        words = jnp.zeros(K.WORDS + 1, jnp.uint32)
+        # non-overlapping bits => add == or
+        words = words.at[word].add(hi)
+        words = words.at[word + 1].add(lo)
+        return words[:K.WORDS], total
+
+    words, nbits = jax.vmap(one_block)(codes)
+    return words, nbits.astype(jnp.int32)

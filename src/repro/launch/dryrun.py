@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (including repro.*):
+# jax locks the device count at first backend initialization.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * the per-chip memory footprint (compiled.memory_analysis()),
+  * the FLOP/byte/collective volumes (cost_analysis + HLO parse) feeding
+    the roofline table in EXPERIMENTS.md.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k \
+        --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get_arch
+from ..models import transformer as T
+from ..optim import CompressionConfig
+from ..runtime.sharding import param_shardings
+from . import mesh as mesh_lib
+from . import roofline as RL
+from . import serve as serve_lib
+from .train import (TrainConfig, batch_shardings, init_state, make_plan_for,
+                    make_train_step, state_shardings)
+
+
+def _batch_structs(model_cfg, batch: int, seq: int):
+    text = seq
+    out = {}
+    if model_cfg.frontend == "vision":
+        text = seq - model_cfg.frontend_len
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (batch, model_cfg.frontend_len, model_cfg.d_model), jnp.float32)
+    elif model_cfg.frontend == "audio":
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (batch, model_cfg.encoder.n_frames, model_cfg.d_model),
+            jnp.float32)
+    out["tokens"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((batch, text), jnp.int32)
+    return out
+
+
+def n_params_of(model_cfg) -> int:
+    shapes = jax.eval_shape(lambda: T.init_params(jax.random.key(0),
+                                                  model_cfg))
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+
+def n_active_params_of(model_cfg, n_total: int) -> int:
+    """Active params per token (MoE: only top-k experts count)."""
+    inactive = 0
+    for u in model_cfg.units:
+        for b in u.blocks:
+            if b.mlp_kind == "moe":
+                m = b.moe
+                per_expert = 3 * m.d_model * m.d_ff
+                inactive += u.repeat * per_expert * (m.n_experts - m.top_k)
+    return n_total - inactive
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool,
+               compile_it: bool = True, save_hlo_to: Optional[str] = None):
+    spec = get_arch(arch_id)
+    shape = next(s for s in spec.shapes if s.name == shape_name)
+    if shape.skip:
+        return {"arch": arch_id, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": shape.skip}
+    model_cfg = spec.config()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    plan = make_plan_for(model_cfg, mesh)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        comp_on = multi_pod and not os.environ.get("REPRO_DISABLE_COMP")
+        train_cfg = TrainConfig(comp=CompressionConfig(enabled=comp_on))
+        state_struct = jax.eval_shape(
+            lambda: init_state(jax.random.key(0), model_cfg, train_cfg,
+                               plan))
+        batch_struct = _batch_structs(model_cfg, shape.global_batch,
+                                      shape.seq_len)
+        step = make_train_step(model_cfg, train_cfg, plan)
+        ss = state_shardings(state_struct, plan)
+        bs = batch_shardings(batch_struct, plan)
+        lowered = jax.jit(step, in_shardings=(ss, bs),
+                          donate_argnums=(0,)).lower(state_struct,
+                                                     batch_struct)
+        tokens = shape.global_batch * shape.seq_len
+        kind = "train"
+    elif shape.kind == "prefill":
+        params_struct = serve_lib.serving_params_struct(model_cfg)
+        ps = param_shardings(params_struct, plan)
+        fn, args, shardings = serve_lib.make_prefill_fn(
+            model_cfg, plan, shape.global_batch, shape.seq_len)
+        lowered = jax.jit(fn, in_shardings=(ps,) + shardings).lower(
+            params_struct, *args)
+        tokens = shape.global_batch * shape.seq_len
+        kind = "prefill"
+    else:  # decode
+        params_struct = serve_lib.serving_params_struct(model_cfg)
+        ps = param_shardings(params_struct, plan)
+        fn, tok_struct, cache_struct, (ts, cs) = serve_lib.make_decode_fn(
+            model_cfg, plan, shape.global_batch, shape.seq_len)
+        lowered = jax.jit(fn, in_shardings=(ps, ts, cs),
+                          donate_argnums=(2,)).lower(
+            params_struct, tok_struct, cache_struct)
+        tokens = shape.global_batch
+        kind = "decode"
+
+    t_lower = time.time() - t0
+    result = {"arch": arch_id, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "status": "lowered", "chips": chips,
+              "lower_s": round(t_lower, 1)}
+    if not compile_it:
+        return result
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.time() - t0, 1)
+    result["status"] = "ok"
+
+    try:
+        ma = compiled.memory_analysis()
+        result["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(ma, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:
+        result["memory"] = {"error": str(e)}
+
+    # loop-weighted HLO analysis (XLA cost_analysis counts scan bodies
+    # once; see hlo_analysis.py) — cost_analysis kept for reference
+    from . import hlo_analysis as HA
+    try:
+        hlo_txt = compiled.as_text()
+        ha = HA.analyze(hlo_txt, n_devices=chips)
+        terms = RL.RooflineTerms(
+            flops_per_chip=ha["flops"], bytes_per_chip=ha["hbm_bytes"],
+            collective_bytes_per_chip=ha["collective_bytes"], chips=chips,
+            collective_detail=ha["collective_detail"])
+        if save_hlo_to:
+            import gzip
+            with gzip.open(save_hlo_to, "wt") as f:
+                f.write(hlo_txt)
+    except Exception as e:
+        result["hlo_analysis_error"] = str(e)
+        terms = RL.terms_from_compiled(compiled, chips)
+    try:
+        result["xla_cost_analysis_raw"] = RL.terms_from_compiled(
+            compiled, chips).as_dict()
+    except Exception:
+        pass
+    n_total = n_params_of(model_cfg)
+    n_active = n_active_params_of(model_cfg, n_total)
+    mf = RL.model_flops(n_total, tokens, kind, n_active)
+    result["roofline"] = terms.as_dict()
+    result["n_params"] = n_total
+    result["n_active_params"] = n_active
+    result["model_flops"] = mf
+    hlo_total_flops = terms.flops_per_chip * chips
+    result["useful_flops_ratio"] = (mf / hlo_total_flops
+                                    if hlo_total_flops else None)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--lower-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or args.arch is None) \
+        else [args.arch]
+    for a in archs:
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in get_arch(a).shapes])
+        for s in shapes:
+            meshes = (["single", "multi"] if args.mesh == "both"
+                      else [args.mesh])
+            for m in meshes:
+                cells.append((a, s, m == "multi"))
+
+    os.makedirs(args.out, exist_ok=True)
+    for a, s, mp in cells:
+        tag = f"{a}__{s}__{'multi' if mp else 'single'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = lower_cell(a, s, mp, compile_it=not args.lower_only,
+                             save_hlo_to=os.path.join(args.out,
+                                                      tag + ".hlo.gz"))
+        except Exception as e:
+            res = {"arch": a, "shape": s,
+                   "mesh": "multi" if mp else "single",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        print(f"  -> {res['status']} "
+              + (res.get("error", "")[:200] if res["status"] == "error"
+                 else f"compile={res.get('compile_s')}s "
+                      f"bound={res.get('roofline', {}).get('bound')}"),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

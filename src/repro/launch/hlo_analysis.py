@@ -1,0 +1,251 @@
+"""Loop-weighted cost analysis over optimized HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE, which
+under-reports FLOPs/bytes/collectives by the trip count (~n_layers with
+scan-over-layers). This module parses the optimized HLO, builds the
+computation call graph (fusion `calls=`, while `body=/condition=` with
+`known_trip_count`, conditionals), and accumulates:
+
+  * flops             — dot ops: 2 * prod(out_dims) * prod(contracted)
+                        (matmul-dominated models; elementwise flops are
+                        bandwidth-, not compute-relevant)
+  * hbm_bytes         — per top-level op in non-fusion-internal
+                        computations: output + operand bytes (fusion
+                        internals stay on-chip and are skipped)
+  * collective wire bytes per kind, with ring-cost conventions:
+        all-gather / all-to-all / collective-permute : output bytes
+        all-reduce                                   : 2 x bytes
+        reduce-scatter                               : group_size x output
+
+Everything is weighted by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "s2": 0.25, "u2": 0.25,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>.*?)\s*"
+    r"(?P<opcode>[\w\-]+)\((?P<args>.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?(?P<name>[\w.\-]+)\s+\([^)]*\)\s*->")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> float:
+    total = 0.0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # args + attrs
+
+
+def parse_computations(txt: str):
+    """-> (comps: name -> [Op], entry_name, fusion_internal: set)."""
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    current: Optional[str] = None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        if line.endswith("{") and "->" in line and "(" in line:
+            s = line.strip()
+            toks = s.split()
+            name = (toks[1] if toks[0] == "ENTRY" else toks[0])
+            name = name.lstrip("%").rstrip("(")
+            current = name
+            comps[current] = []
+            if toks[0] == "ENTRY":
+                entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[current].append(Op(m.group("name"), m.group("type"),
+                                     m.group("opcode"), m.group("args")))
+    return comps, entry
+
+
+def _local_shapes(ops: List[Op]) -> Dict[str, str]:
+    return {op.name: op.type_str for op in ops}
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = 1.0
+    for dt, dims in _shape_dims(op.type_str):
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) \
+        else []
+    ops_args = re.findall(r"%([\w.\-]+)", op.rest.split(", lhs_batch")[0]
+                          .split(", lhs_contracting")[0])
+    contracted = 1.0
+    if ops_args:
+        lhs_type = shapes.get(ops_args[0], "")
+        sd = _shape_dims(lhs_type)
+        if sd:
+            dims = sd[0][1]
+            for c in cdims:
+                if c < len(dims):
+                    contracted *= dims[c]
+    return 2.0 * out_elems * contracted
+
+
+def _group_size(op: Op, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", op.rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _group_key(op: Op, default: int) -> str:
+    """Group size + stride marker: a transposed iota ('T(') means the
+    group members STRIDE across the device array — on the (pod,data,model)
+    mesh with pod-major ids, strided small groups are the pod (DCI)
+    collectives, while consecutive groups are intra-pod stages of XLA's
+    hierarchical decompositions. '2S' = strided pairs (DCI), '2' = local."""
+    g = _group_size(op, default)
+    strided = "T(" in op.rest.split("metadata")[0] \
+        if "replica_groups" in op.rest else False
+    return f"{g}{'S' if strided else ''}"
+
+
+def analyze(txt: str, n_devices: int = 1) -> Dict:
+    comps, entry = parse_computations(txt)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # find fusion-internal computations (reached via fusion calls=)
+    fusion_internal = set()
+    call_edges: Dict[str, List[Tuple[str, float, bool]]] = {}
+    for cname, ops in comps.items():
+        edges = []
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", op.rest)
+                if m:
+                    edges.append((m.group(1), 1.0, True))
+                    fusion_internal.add(m.group(1))
+            elif op.opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", op.rest)
+                mt = re.search(r'known_trip_count[^\d]*(\d+)', op.rest)
+                trips = float(mt.group(1)) if mt else 1.0
+                if mb:
+                    edges.append((mb.group(1), trips, False))
+            elif op.opcode == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"true_computation=%?([\w.\-]+)|"
+                                     r"false_computation=%?([\w.\-]+))",
+                                     op.rest):
+                    for g in m.groups():
+                        if g:
+                            for b in re.findall(r"%?([\w.\-]+)", g):
+                                edges.append((b, 1.0, False))
+            elif op.opcode in ("call", "async-start", "custom-call"):
+                m = re.search(r"(?:to_apply|called_computation)=%?([\w.\-]+)",
+                              op.rest)
+                if m:
+                    edges.append((m.group(1), 1.0, False))
+        call_edges[cname] = edges
+
+    # propagate multipliers from entry
+    mult: Dict[str, float] = {}
+
+    def visit(cname: str, m: float):
+        if cname not in comps:
+            return
+        mult[cname] = mult.get(cname, 0.0) + m
+        for child, trips, _ in call_edges.get(cname, []):
+            visit(child, m * trips)
+
+    visit(entry, 1.0)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_ops = {k: 0 for k in _COLLECTIVES}
+    coll_by_group: Dict[int, float] = {}
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        shapes = _local_shapes(ops)
+        internal = cname in fusion_internal
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, shapes)
+            if internal:
+                continue
+            # memory traffic: output write + operand reads (top level only).
+            # Skip aliasing / control-flow pseudo-ops — they move no bytes
+            # (GTE on a while carry would otherwise phantom-count the whole
+            # loop state tuple every iteration).
+            if op.opcode in ("parameter", "constant", "get-tuple-element",
+                             "tuple", "bitcast", "while", "conditional",
+                             "call", "after-all", "iota"):
+                continue
+            out_b = _type_bytes(op.type_str)
+            opnd_b = 0.0
+            args_part = op.rest.split(", metadata")[0]
+            for a in re.findall(r"%([\w.\-]+)", args_part)[:8]:
+                if a in shapes:
+                    opnd_b += _type_bytes(shapes[a])
+            hbm_bytes += m * (out_b + opnd_b)
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                g = _group_size(op, n_devices)
+                if base == "all-reduce":
+                    wire = 2.0 * out_b
+                elif base == "reduce-scatter":
+                    wire = out_b * max(g - 1, 1)
+                else:
+                    wire = out_b
+                coll[base] += m * wire
+                coll_ops[base] += 1
+                gk = _group_key(op, n_devices)
+                coll_by_group[gk] = coll_by_group.get(gk, 0.0) + m * wire
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": sum(coll.values()),
+        "collective_detail": {"bytes": coll, "ops": coll_ops,
+                              "by_group_size": coll_by_group},
+        "n_computations": len(comps),
+    }

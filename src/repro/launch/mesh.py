@@ -1,0 +1,41 @@
+"""Mesh construction for the production topology.
+
+`make_production_mesh` is a FUNCTION (never a module-level constant): jax
+locks the platform/device count on first backend init, so importing this
+module must not touch device state.
+
+Topology:
+  single pod : (data=16, model=16)            = 256 chips
+  multi-pod  : (pod=2, data=16, model=16)     = 512 chips
+
+`pod` is the slow (DCI) axis: pure DP + CEAZ-compressed gradient exchange.
+`data` is intra-pod DP (+ FSDP/ZeRO param-state sharding, context
+parallelism). `model` is TP/EP/SP.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under launch/dryrun.py (it sets "
+            "xla_force_host_platform_device_count before jax init)")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Arbitrary test mesh from the first prod(shape) devices."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(tuple(shape))
+    return jax.sharding.Mesh(dev, tuple(axes))

@@ -1,0 +1,47 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Hillclimb driver: lower+compile ONE cell with the current code and
+print the loop-weighted roofline terms (used for the §Perf iteration log).
+
+    python -m repro.launch.perf_iter --arch gemma3-1b --shape long_500k \
+        [--mesh multi] [--tag after-fix]
+"""
+import argparse
+import json
+
+from . import dryrun as DR
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    hlo_path = os.path.join(args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.hlo.gz")
+    res = DR.lower_cell(args.arch, args.shape, args.mesh == "multi",
+                        save_hlo_to=hlo_path)
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    rf = res.get("roofline", {})
+    print(json.dumps({
+        "tag": args.tag, "cell": f"{args.arch}/{args.shape}/{args.mesh}",
+        "status": res["status"],
+        "t_compute_ms": round(1e3 * rf.get("t_compute_s", 0), 3),
+        "t_memory_ms": round(1e3 * rf.get("t_memory_s", 0), 3),
+        "t_collective_ms": round(1e3 * rf.get("t_collective_s", 0), 3),
+        "bound": rf.get("bound"),
+        "useful_flops_ratio": res.get("useful_flops_ratio"),
+        "coll_by_group": rf.get("collective_detail", {}).get(
+            "by_group_size"),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Roofline term extraction from a compiled dry-run artifact.
+
+Per (arch, shape, mesh):
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from compiled.cost_analysis(); collective bytes are NOT
+there, so we parse the optimized HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(shape sizes are per-PARTICIPANT in SPMD modules, i.e. already per-chip).
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes; tuples handled by caller via findall."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum OUTPUT shape bytes of each collective op kind in the HLO.
+
+    Uses the result shape on the lhs of `shape op-name(...)` lines — for
+    all-gather/all-to-all the output bounds the wire bytes; for all-reduce
+    output == input; reduce-scatter output is the post-scatter shard (the
+    per-chip receive volume). This is the standard per-chip accounting.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for kind in _COLLECTIVES:
+            # match '  %name = TYPE[...] kind(' or ' kind-start('
+            if re.search(rf"=\s*[^=]*\b{kind}(-start)?\(", ls):
+                lhs = ls.split("=", 1)[1]
+                op_pos = lhs.find(kind)
+                shape_part = lhs[:op_pos]
+                out[kind] += _shape_bytes(shape_part)
+                counts[kind] += 1
+                break
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    chips: int
+    collective_detail: Optional[Dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound estimate."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound": self.bound,
+            "chips": self.chips,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def terms_from_compiled(compiled, chips: int) -> RooflineTerms:
+    """Extract the three terms from a compiled (SPMD) artifact.
+
+    cost_analysis() on an SPMD module reports per-PARTICIPANT numbers
+    (the module is the per-device program), matching the per-chip form of
+    the roofline terms.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes_from_hlo(hlo)
+    counts = coll.pop("_counts")
+    total_coll = float(sum(coll.values()))
+    return RooflineTerms(flops_per_chip=flops, bytes_per_chip=byts,
+                         collective_bytes_per_chip=total_coll, chips=chips,
+                         collective_detail={"bytes": coll, "ops": counts})
+
+
+def model_flops(n_params: int, tokens: int, kind: str,
+                n_active: Optional[int] = None) -> float:
+    """Reference MODEL_FLOPS: 6*N*D train, 2*N*D forward-only."""
+    n = n_active if n_active is not None else n_params
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,245 @@
+"""Mamba-2 (SSD) block: chunked-scan training/prefill + recurrent decode.
+
+Used by zamba2-7b's SSM layers. Implementation follows the minimal SSD
+formulation (Dao & Gu 2024): within chunks a masked quadratic form, across
+chunks a linear state recurrence — both jnp-native (einsum + lax.scan) so
+XLA shards them with the plan's constraints (state is per-head, heads
+replicated; the d_inner projections are TP-sharded like an MLP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.sharding import ShardingPlan
+from .modules import _normal, dense_init, norm_init, norm_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_kernel: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_init(key, cfg: Mamba2Config):
+    """Separate projections per segment: a fused in-proj + jnp.split on the
+    TP-sharded output forces a full-activation all-gather at every split
+    boundary that is not shard-aligned (measured 1.9 GB x 13 x 9 per step
+    on zamba2/train_4k — EXPERIMENTS.md §Perf). z/x shard over model; the
+    small B/C/dt streams stay replicated."""
+    ks = jax.random.split(key, 10)
+    di, H, N, G = cfg.d_inner, cfg.n_heads, cfg.d_state, cfg.n_groups
+    p = {
+        "wi_z": dense_init(ks[0], cfg.d_model, (di,)),
+        "wi_x": dense_init(ks[1], cfg.d_model, (di,)),
+        "wi_B": dense_init(ks[2], cfg.d_model, (G * N,)),
+        "wi_C": dense_init(ks[3], cfg.d_model, (G * N,)),
+        "wi_dt": dense_init(ks[4], cfg.d_model, (H,)),
+        "conv_x_w": _normal(ks[5], (cfg.conv_kernel, di),
+                            cfg.conv_kernel ** -0.5),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "convB_w": _normal(ks[6], (cfg.conv_kernel, G * N),
+                           cfg.conv_kernel ** -0.5),
+        "convB_b": jnp.zeros((G * N,), jnp.float32),
+        "convC_w": _normal(ks[7], (cfg.conv_kernel, G * N),
+                           cfg.conv_kernel ** -0.5),
+        "convC_b": jnp.zeros((G * N,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm": norm_init(di),
+        "wo": _normal(ks[8], (di, cfg.d_model), di ** -0.5),
+    }
+    return {"ssm": p}
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq. x: (B,S,C); w: (K,C).
+
+    If `state` is given ((B, K-1, C), decode), uses it as left context and
+    returns the updated state.
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+        xp = jnp.concatenate([pad, x], 1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], 1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def _segsum(a):
+    """Cumulative segment sums: out[..., i, j] = sum_{k=j+1..i} a[..., k]."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, B, C, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """SSD scan. x: (b,s,h,p); dt: (b,s,h); B,C: (b,s,g,n).
+
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    s_real = s
+    pad = (-s) % chunk
+    if pad:       # zero-pad tail: zero x contributes nothing to states/y
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    nc = s // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                  # (h,) negative
+    dA = dt * A                                              # (b,s,h)
+    xd = x * dt[..., None].astype(x.dtype)
+
+    rs = lambda t: t.reshape((b, nc, chunk) + t.shape[2:])
+    xc, dAc, Bc, Cc = rs(xd), rs(dA), rs(B), rs(C)
+    # broadcast groups to heads
+    rep = h // g
+    Bh = jnp.repeat(Bc, rep, axis=3) if g != h else Bc       # (b,nc,l,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3) if g != h else Cc
+
+    dAc = dAc.transpose(0, 1, 3, 2)                          # (b,nc,h,l)
+    # the (l,l) pairwise tensors dominate HBM traffic at train shapes
+    # (B*nc*H*l^2 elements each); bf16 halves the bytes — exp/cumsum stay
+    # f32, products accumulate f32 via preferred_element_type
+    L = jnp.exp(_segsum(dAc)).astype(jnp.bfloat16)           # (b,nc,h,l,l)
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Ch.astype(jnp.bfloat16),
+                        Bh.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.bfloat16)
+    y_diag = jnp.einsum("bchlm,bchlm,bcmhp->bclhp", scores, L,
+                        xc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    # chunk states
+    dA_tot = dAc.sum(-1)                                     # (b,nc,h)
+    decay = jnp.exp(dA_tot[..., None] - jnp.cumsum(dAc, -1))  # (b,nc,h,l)
+    states = jnp.einsum("bchl,bclhn,bclhp->bchpn",
+                        decay.astype(jnp.bfloat16),
+                        Bh.astype(jnp.bfloat16),
+                        xc.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+    # inter-chunk recurrence
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dtot = inp
+        new = carry * jnp.exp(dtot)[:, :, None, None] + st
+        return new, carry                                    # emit PREVIOUS
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   dA_tot.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (b,nc,h,p,n)
+    # inter-chunk contribution
+    in_decay = jnp.exp(jnp.cumsum(dAc, -1))                  # (b,nc,h,l)
+    y_off = jnp.einsum("bclhn,bchl,bchpn->bclhp",
+                       Ch.astype(jnp.bfloat16),
+                       in_decay.astype(jnp.bfloat16),
+                       prev_states.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(b, s, h, p).astype(x.dtype)
+    return y[:, :s_real], final
+
+
+def mamba2_apply(p, cfg: Mamba2Config, x, plan: ShardingPlan):
+    """Training/prefill. x: (B,S,d) -> (y, final_ssm_state)."""
+    sp = p["ssm"]
+    dt_ = x.dtype
+    B_, S, _ = x.shape
+    di, H, N, G, P_ = (cfg.d_inner, cfg.n_heads, cfg.d_state, cfg.n_groups,
+                       cfg.head_dim)
+    z = jnp.einsum("btd,de->bte", x, sp["wi_z"].astype(dt_))
+    xin = jnp.einsum("btd,de->bte", x, sp["wi_x"].astype(dt_))
+    Bm = jnp.einsum("btd,de->bte", x, sp["wi_B"].astype(dt_))
+    Cm = jnp.einsum("btd,de->bte", x, sp["wi_C"].astype(dt_))
+    dt = jnp.einsum("btd,de->bte", x, sp["wi_dt"].astype(dt_))
+    z = plan.act_btf(z)
+    xin = plan.act_btf(xin)
+    xin, _ = _causal_conv(xin, sp["conv_x_w"].astype(dt_),
+                          sp["conv_x_b"].astype(dt_))
+    xin = plan.act_btf(xin)
+    Bm, _ = _causal_conv(Bm, sp["convB_w"].astype(dt_),
+                         sp["convB_b"].astype(dt_))
+    Cm, _ = _causal_conv(Cm, sp["convC_w"].astype(dt_),
+                         sp["convC_b"].astype(dt_))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + sp["dt_bias"])
+    y, state = ssd_chunked(xin.reshape(B_, S, H, P_), dt, sp["a_log"],
+                           Bm.reshape(B_, S, G, N), Cm.reshape(B_, S, G, N),
+                           cfg.chunk)
+    y = y + xin.reshape(B_, S, H, P_) * sp["d_skip"][:, None].astype(dt_)
+    y = y.reshape(B_, S, di)
+    y = norm_apply(sp["norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, sp["wo"].astype(dt_))
+    return plan.act_btd(out), state
+
+
+def mamba2_decode(p, cfg: Mamba2Config, x, cache, plan: ShardingPlan):
+    """Single-token step. cache: {'conv': (B,K-1,di+2GN), 'state':
+    (B,H,P,N)}. x: (B,1,d)."""
+    sp = p["ssm"]
+    dt_ = x.dtype
+    B_ = x.shape[0]
+    di, H, N, G, P_ = (cfg.d_inner, cfg.n_heads, cfg.d_state, cfg.n_groups,
+                       cfg.head_dim)
+    z = jnp.einsum("btd,de->bte", x, sp["wi_z"].astype(dt_))
+    xi = jnp.einsum("btd,de->bte", x, sp["wi_x"].astype(dt_))
+    Bi = jnp.einsum("btd,de->bte", x, sp["wi_B"].astype(dt_))
+    Ci = jnp.einsum("btd,de->bte", x, sp["wi_C"].astype(dt_))
+    dt = jnp.einsum("btd,de->bte", x, sp["wi_dt"].astype(dt_))
+    conv_in = jnp.concatenate([xi, Bi, Ci], -1)
+    conv_w = jnp.concatenate([sp["conv_x_w"], sp["convB_w"],
+                              sp["convC_w"]], -1).astype(dt_)
+    conv_b = jnp.concatenate([sp["conv_x_b"], sp["convB_b"],
+                              sp["convC_b"]], -1).astype(dt_)
+    xbc, conv_state = _causal_conv(conv_in, conv_w, conv_b, cache["conv"])
+    xin, Bm, Cm = jnp.split(xbc[:, 0], [di, di + G * N], -1)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + sp["dt_bias"])
+    A = -jnp.exp(sp["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt1 * A)                                    # (B,H)
+    xh = xin.reshape(B_, H, P_)
+    Bh = jnp.repeat(Bm.reshape(B_, G, N), H // G, 1)
+    Ch = jnp.repeat(Cm.reshape(B_, G, N), H // G, 1)
+    st = cache["state"].astype(jnp.float32)
+    st = (st * dA[:, :, None, None]
+          + jnp.einsum("bhp,bhn,bh->bhpn", xh.astype(jnp.float32), Bh.astype(jnp.float32), dt1))
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch.astype(jnp.float32)).astype(dt_)
+    y = y + xh * sp["d_skip"][:, None].astype(dt_)
+    y = norm_apply(sp["norm"], y.reshape(B_, 1, di)) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, sp["wo"].astype(dt_))
+    return plan.act_btd(out), {"conv": conv_state, "state": st.astype(cache["state"].dtype)}
+
+
+def mamba2_cache_init(cfg: Mamba2Config, batch: int, dtype=jnp.bfloat16):
+    conv_dim = cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+    }

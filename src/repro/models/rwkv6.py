@@ -1,0 +1,206 @@
+"""RWKV-6 "Finch": attention-free time mix with data-dependent decay.
+
+Chunked-parallel form for training/prefill (GLA-style, chunk=16 with
+mid-chunk renormalization to keep exp(cum-log-decay) ratios inside f32
+range; per-step log-decay clamped to [-5, 0] — documented deviation, the
+reference kernel computes in higher effective precision), plus an exact
+recurrent form for decode. Heads are replicated (state is (B,H,P,P) —
+small); the projections are TP-sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.sharding import ShardingPlan
+from .modules import _normal, dense_init, norm_apply, norm_init
+
+LOG_W_MIN = -5.0
+CHUNK = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    lora_rank: int = 32
+    d_ff: int = 0                 # channel-mix hidden (7168 for 1.6b)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_init(key, cfg: RWKV6Config):
+    ks = jax.random.split(key, 16)
+    d, H, P = cfg.d_model, cfg.n_heads, cfg.head_dim
+    r = cfg.lora_rank
+    p = {
+        # token-shift mix coefficients for (x_for_lora, r, k, v, w, g)
+        "maa": _normal(ks[0], (6, d), 0.02),
+        "lora_w1": _normal(ks[1], (d, 5 * r), d ** -0.5),    # ddlerp lora
+        "lora_w2": _normal(ks[2], (5, r, d), r ** -0.5),
+        "decay_base": jnp.full((d,), -1.0),
+        "decay_w1": _normal(ks[3], (d, 2 * r), d ** -0.5),
+        "decay_w2": _normal(ks[4], (2 * r, d), r ** -0.5),
+        "bonus_u": _normal(ks[5], (H, P), 0.5),
+        "wr": dense_init(ks[6], d, (d,)),
+        "wk": dense_init(ks[7], d, (d,)),
+        "wv": dense_init(ks[8], d, (d,)),
+        "wg": dense_init(ks[9], d, (d,)),
+        "wo": _normal(ks[10], (d, d), d ** -0.5),
+        "gn": norm_init(d),                                   # group-ish norm
+    }
+    return {"ssm": p}
+
+
+def rwkv6_cmix_init(key, cfg: RWKV6Config):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {"ssm_cmix": {
+        "maa_k": _normal(ks[0], (d,), 0.02),
+        "maa_r": _normal(ks[1], (d,), 0.02),
+        "wk": dense_init(ks[2], d, (cfg.d_ff,)),
+        "wv": _normal(ks[3], (cfg.d_ff, d), cfg.d_ff ** -0.5),
+        "wr": dense_init(jax.random.fold_in(key, 9), d, (d,)),
+    }}
+
+
+def _shifted(x, last=None):
+    """x_{t-1} along seq; `last` (B,d) supplies t=-1 context at decode."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], 1)
+
+
+def _mixes(sp, x, last=None):
+    """Data-dependent token-shift (ddlerp) producing (xr, xk, xv, xw, xg)."""
+    dt = x.dtype
+    sx = _shifted(x, last) - x
+    xx = x + sx * sp["maa"][0].astype(dt)
+    lo = jnp.tanh(jnp.einsum("btd,dr->btr", xx, sp["lora_w1"].astype(dt)))
+    B, S = x.shape[:2]
+    lo = lo.reshape(B, S, 5, -1)
+    dyn = jnp.einsum("btfr,frd->btfd", lo, sp["lora_w2"].astype(dt))
+    outs = []
+    for i in range(5):
+        mi = sp["maa"][i + 1].astype(dt) + dyn[:, :, i]
+        outs.append(x + sx * mi)
+    return outs  # xr, xk, xv, xw, xg
+
+
+def _rkvwg(sp, x, cfg, last=None):
+    dt = x.dtype
+    B, S = x.shape[:2]
+    H, P = cfg.n_heads, cfg.head_dim
+    xr, xk, xv, xw, xg = _mixes(sp, x, last)
+    r = jnp.einsum("btd,de->bte", xr, sp["wr"].astype(dt)).reshape(B, S, H, P)
+    k = jnp.einsum("btd,de->bte", xk, sp["wk"].astype(dt)).reshape(B, S, H, P)
+    v = jnp.einsum("btd,de->bte", xv, sp["wv"].astype(dt)).reshape(B, S, H, P)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, sp["wg"].astype(dt)))
+    dd = jnp.tanh(jnp.einsum("btd,dr->btr", xw, sp["decay_w1"].astype(dt)))
+    dd = jnp.einsum("btr,rd->btd", dd, sp["decay_w2"].astype(dt))
+    logw = -jnp.exp(jnp.clip(sp["decay_base"].astype(jnp.float32)
+                             + dd.astype(jnp.float32), -8.0, 1.0))
+    logw = jnp.clip(logw, LOG_W_MIN, -1e-4).reshape(B, S, H, P)
+    return r, k, v, g, logw
+
+
+def _wkv_chunked(r, k, v, logw, u, init_state=None):
+    """Chunked WKV. r,k,v,logw: (B,S,H,P); u: (H,P).
+
+    y_t = sum_{s<t} (prod_{j=s+1..t-1} w_j) . (r_t k_s) v_s + (u.r_t k_t) v_t
+    state S_t[p, q] over (key-dim p, value-dim q).
+    """
+    B, S, H, P = r.shape
+    nc = S // CHUNK
+    rc = lambda t: t.reshape(B, nc, CHUNK, H, P)
+    r_, k_, v_, lw_ = rc(r.astype(jnp.float32)), rc(k.astype(jnp.float32)), \
+        rc(v.astype(jnp.float32)), rc(logw.astype(jnp.float32))
+    a = jnp.cumsum(lw_, axis=2)                       # within-chunk cum log w
+    a_tot = a[:, :, -1]                               # (B,nc,H,P)
+    mid = a_tot * 0.5
+    # intra-chunk pairwise: decay(t,s) = exp(a_{t-1} - a_s), s < t
+    r_dec = r_ * jnp.exp(a - lw_ - mid[:, :, None])   # r_t exp(a_{t-1}-mid)
+    k_dec = k_ * jnp.exp(mid[:, :, None] - a)         # k_s exp(mid - a_s)
+    scores = jnp.einsum("bclhp,bcmhp->bchlm", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((CHUNK, CHUNK), bool), -1)
+    scores = jnp.where(tri, scores, 0.0)
+    bonus = jnp.einsum("bclhp,bclhp->bclh", r_, k_ * u)
+    y_intra = (jnp.einsum("bchlm,bcmhp->bclhp", scores, v_)
+               + bonus[..., None] * v_)
+    # chunk state contributions: sum_s exp(a_tot - a_s) k_s v_s^T
+    k_st = k_ * jnp.exp(a_tot[:, :, None] - a)
+    states = jnp.einsum("bclhp,bclhq->bchpq", k_st, v_)
+    s0 = (jnp.zeros((B, H, P, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st_c, atot_c = inp                            # (B,H,P,P), (B,H,P)
+        new = carry * jnp.exp(atot_c)[..., None] + st_c
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   a_tot.transpose(1, 0, 2, 3)))
+    prev = prev.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,P)
+    r_in = r_ * jnp.exp(a - lw_)                      # r_t exp(a_{t-1})
+    y_inter = jnp.einsum("bclhp,bchpq->bclhq", r_in, prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, final
+
+
+def rwkv6_apply(p, cfg: RWKV6Config, x, plan: ShardingPlan):
+    sp = p["ssm"]
+    B, S, d = x.shape
+    r, k, v, g, logw = _rkvwg(sp, x, cfg)
+    y, state = _wkv_chunked(r, k, v, logw, sp["bonus_u"].astype(jnp.float32))
+    y = norm_apply(sp["gn"], y.reshape(B, S, d).astype(x.dtype)) * g
+    out = jnp.einsum("btd,de->bte", y, sp["wo"].astype(x.dtype))
+    return plan.act_btd(out), state
+
+
+def rwkv6_decode(p, cfg: RWKV6Config, x, cache, plan: ShardingPlan):
+    """cache: {'sx': (B,d), 'state': (B,H,P,P)}; x: (B,1,d)."""
+    sp = p["ssm"]
+    B, _, d = x.shape
+    H, P = cfg.n_heads, cfg.head_dim
+    r, k, v, g, logw = _rkvwg(sp, x, cfg, last=cache["sx"])
+    r1, k1, v1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v))
+    w1 = jnp.exp(logw[:, 0])
+    st = cache["state"].astype(jnp.float32)
+    u = sp["bonus_u"].astype(jnp.float32)
+    y = jnp.einsum("bhp,bhpq->bhq", r1, st + u[None, :, :, None]
+                   * jnp.einsum("bhp,bhq->bhpq", k1, v1))
+    st = st * w1[..., None] + jnp.einsum("bhp,bhq->bhpq", k1, v1)
+    y = norm_apply(sp["gn"], y.reshape(B, 1, d).astype(x.dtype)) * g
+    out = jnp.einsum("btd,de->bte", y, sp["wo"].astype(x.dtype))
+    return plan.act_btd(out), {"sx": x[:, 0], "state": st}
+
+
+def rwkv6_cmix_apply(p, cfg: RWKV6Config, x, plan: ShardingPlan,
+                     last=None):
+    """Channel mix (the RWKV FFN). Returns (y, new_last)."""
+    cp = p["ssm_cmix"]
+    dt = x.dtype
+    sx = _shifted(x, last) - x
+    xk = x + sx * cp["maa_k"].astype(dt)
+    xr = x + sx * cp["maa_r"].astype(dt)
+    h = jnp.einsum("btd,df->btf", xk, cp["wk"].astype(dt))
+    h = jnp.square(jax.nn.relu(h))
+    h = plan.act_btf(h)
+    kv = jnp.einsum("btf,fd->btd", h, cp["wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, cp["wr"].astype(dt)))
+    return plan.act_btd(rr * kv), x[:, -1]
+
+
+def rwkv6_cache_init(cfg: RWKV6Config, batch: int, dtype=jnp.bfloat16):
+    return {
+        "sx": jnp.zeros((batch, cfg.d_model), dtype),
+        "sx_cmix": jnp.zeros((batch, cfg.d_model), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                           jnp.float32),
+    }

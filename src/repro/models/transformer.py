@@ -1,0 +1,443 @@
+"""Unified LM: heterogeneous block schedules under scan-over-layers.
+
+A model is a sequence of UNITS; each unit is a pattern of blocks repeated R
+times with stacked params and executed under lax.scan (keeps HLO size and
+compile time O(unique patterns), not O(layers) — 60-layer DeepSeek and
+81-layer Zamba2 compile as 2-3 scan bodies). Heterogeneous schedules
+(gemma3's 5 local : 1 global, zamba2's shared-attention insertions) are
+expressed by putting the whole repeating pattern inside one unit.
+
+Block kinds: 'attn' (GQA/MQA, optional sliding window / qk-norm / M-RoPE /
+cross-attention), 'mla' (DeepSeek latent attention), 'mamba' (SSD),
+'rwkv' (RWKV-6). MLP kinds: 'dense', 'moe', 'rwkv_cmix', 'none'.
+
+Decode caches: windowed attention layers use RING buffers (window slots,
+not context slots) — at 500k context gemma3's 28 local layers hold 1024
+slots each instead of 524288 (a ~500x KV memory cut; see DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime.sharding import ShardingPlan
+from . import mamba2 as M2
+from . import modules as mod
+from . import rwkv6 as R6
+from .modules import AttnConfig, MLAConfig, MoEConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    kind: str                                # attn | mla | mamba | rwkv
+    attn: Optional[AttnConfig] = None
+    mla: Optional[MLAConfig] = None
+    mamba: Optional[M2.Mamba2Config] = None
+    rwkv: Optional[R6.RWKV6Config] = None
+    mlp_kind: str = "dense"                  # dense | moe | rwkv_cmix | none
+    d_ff: int = 0
+    moe: Optional[MoEConfig] = None
+    act: str = "silu"
+    gated: bool = True
+    post_norms: bool = False                 # gemma3 sandwich
+    layernorm: bool = False                  # whisper uses LayerNorm
+    cross_attn: bool = False                 # whisper decoder
+    use_shared: bool = False                 # zamba2 shared block
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitSpec:
+    repeat: int
+    blocks: Tuple[BlockSpec, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    n_layers: int
+    attn: AttnConfig
+    d_ff: int
+    n_frames: int = 1500
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    vocab_size: int
+    units: Tuple[UnitSpec, ...]
+    embed_scale: bool = False                # gemma: sqrt(d_model)
+    final_softcap: Optional[float] = None
+    shared_block: Optional[BlockSpec] = None
+    encoder: Optional[EncoderConfig] = None
+    frontend: Optional[str] = None           # None | audio | vision
+    frontend_len: int = 0
+    layernorm: bool = False
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    remat: str = "block"                     # none | block
+    sub_quadratic: bool = False              # eligible for long_500k
+
+    @property
+    def n_layers(self) -> int:
+        return sum(u.repeat * len(u.blocks) for u in self.units)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, b: BlockSpec, d_model: int):
+    if b.use_shared:
+        return {}          # params live once in params['shared']
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": mod.norm_init(d_model, b.layernorm)}
+    if b.kind == "attn":
+        p.update(mod.attn_init(ks[0], b.attn))
+    elif b.kind == "mla":
+        p.update(mod.mla_init(ks[0], b.mla))
+    elif b.kind == "mamba":
+        p.update(M2.mamba2_init(ks[0], b.mamba))
+    elif b.kind == "rwkv":
+        p.update(R6.rwkv6_init(ks[0], b.rwkv))
+    else:
+        raise ValueError(b.kind)
+    if b.cross_attn:
+        p["ln_x"] = mod.norm_init(d_model, b.layernorm)
+        p["cross"] = mod.attn_init(ks[3], b.attn)
+    if b.post_norms:
+        p["ln1_post"] = mod.norm_init(d_model, b.layernorm)
+    if b.mlp_kind != "none":
+        p["ln2"] = mod.norm_init(d_model, b.layernorm)
+        if b.mlp_kind == "dense":
+            p.update(mod.mlp_init(ks[1], d_model, b.d_ff, b.gated))
+        elif b.mlp_kind == "moe":
+            p.update(mod.moe_init(ks[1], b.moe))
+        elif b.mlp_kind == "rwkv_cmix":
+            p.update(R6.rwkv6_cmix_init(ks[1], b.rwkv))
+        if b.post_norms:
+            p["ln2_post"] = mod.norm_init(d_model, b.layernorm)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, len(cfg.units) + 4)
+    params: Dict[str, Any] = {}
+    params.update(mod.embed_init(keys[-1], cfg.vocab_size, cfg.d_model))
+    params["final_norm"] = mod.norm_init(cfg.d_model, cfg.layernorm)
+    units = []
+    for ui, unit in enumerate(cfg.units):
+        def one(k):
+            bks = jax.random.split(k, len(unit.blocks))
+            return {f"b{i}": _block_init(bks[i], b, cfg.d_model)
+                    for i, b in enumerate(unit.blocks)}
+        uks = jax.random.split(keys[ui], unit.repeat)
+        units.append(jax.vmap(one)(uks))
+    params["units"] = units
+    if cfg.shared_block is not None:
+        params["shared"] = _block_init(keys[-2], cfg.shared_block,
+                                       cfg.d_model)
+    if cfg.encoder is not None:
+        enc = cfg.encoder
+        eb = BlockSpec(kind="attn",
+                       attn=dataclasses.replace(enc.attn, causal=False,
+                                                rotary_frac=0.0),
+                       mlp_kind="dense", d_ff=enc.d_ff, gated=False,
+                       act="gelu", layernorm=True)
+
+        def one_enc(k):
+            return {"b0": _block_init(k, eb, cfg.d_model)}
+        eks = jax.random.split(keys[-3], enc.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(one_enc)(eks),
+            "norm": mod.norm_init(cfg.d_model, True),
+            "pos": mod._normal(keys[-4], (enc.n_frames, cfg.d_model), 0.02),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_apply(bp, b: BlockSpec, h, positions, plan, aux, memory,
+                 q_offset: int = 0):
+    x = mod.norm_apply(bp["ln1"], h)
+    if b.kind == "attn":
+        y, _ = mod.attn_apply(bp, b.attn, x, positions, plan, q_offset)
+    elif b.kind == "mla":
+        y, _ = mod.mla_apply(bp, b.mla, x, positions, plan, q_offset)
+    elif b.kind == "mamba":
+        y, _ = M2.mamba2_apply(bp, b.mamba, x, plan)
+    elif b.kind == "rwkv":
+        y, _ = R6.rwkv6_apply(bp, b.rwkv, x, plan)
+    if b.post_norms:
+        y = mod.norm_apply(bp["ln1_post"], y)
+    h = h + y
+    if b.cross_attn and memory is not None:
+        xc = mod.norm_apply(bp["ln_x"], h)
+        h = h + mod.cross_attn_apply({"attn": bp["cross"]["attn"]}, b.attn,
+                                     xc, memory, plan)
+    if b.mlp_kind == "none":
+        return h, aux
+    x2 = mod.norm_apply(bp["ln2"], h)
+    if b.mlp_kind == "dense":
+        y2 = mod.mlp_apply(bp, x2, plan, b.act)
+    elif b.mlp_kind == "moe":
+        y2, a = mod.moe_apply(bp, b.moe, x2, plan)
+        aux = aux + a
+    elif b.mlp_kind == "rwkv_cmix":
+        y2, _ = R6.rwkv6_cmix_apply(bp, b.rwkv, x2, plan)
+    if b.post_norms:
+        y2 = mod.norm_apply(bp["ln2_post"], y2)
+    return h + y2, aux
+
+
+def _unit_scan(uparams, unit: UnitSpec, cfg: ModelConfig, h, positions,
+               plan, aux, shared_params, memory):
+    def body(carry, pslice):
+        hh, ax = carry
+        for bi, b in enumerate(unit.blocks):
+            bp = shared_params if b.use_shared else pslice[f"b{bi}"]
+            hh, ax = _block_apply(bp, b, hh, positions, plan, ax, memory)
+        return (hh, ax), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    (h, aux), _ = jax.lax.scan(body, (h, aux), uparams)
+    return h, aux
+
+
+def encode_frontend(params, cfg: ModelConfig, frames, plan):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    enc = cfg.encoder
+    h = (frames + params["encoder"]["pos"][None, :frames.shape[1]]
+         ).astype(mod.COMPUTE_DTYPE)
+    eb = BlockSpec(kind="attn",
+                   attn=dataclasses.replace(enc.attn, causal=False,
+                                            rotary_frac=0.0),
+                   mlp_kind="dense", d_ff=enc.d_ff, gated=False,
+                   act="gelu", layernorm=True)
+
+    def body(carry, pslice):
+        hh, _ = _block_apply(pslice["b0"], eb, carry, None, plan,
+                             jnp.float32(0), None)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return mod.norm_apply(params["encoder"]["norm"], h)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, plan: ShardingPlan,
+                   positions=None, frontend=None):
+    """tokens: (B, S_text). Returns (hidden (B,S,d), aux, text_offset)."""
+    h = mod.embed_apply(params, tokens, plan,
+                        scale=cfg.d_model ** 0.5 if cfg.embed_scale else None)
+    memory = None
+    offset = 0
+    if cfg.encoder is not None and frontend is not None:
+        memory = encode_frontend(params, cfg, frontend, plan)
+    elif cfg.frontend == "vision" and frontend is not None:
+        h = jnp.concatenate([frontend.astype(h.dtype), h], axis=1)
+        offset = frontend.shape[1]
+        h = plan.act_btd(h)
+    S = h.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions,
+                                         (3,) + (h.shape[0], S))
+    aux = jnp.float32(0.0)
+    for ui, unit in enumerate(cfg.units):
+        h, aux = _unit_scan(params["units"][ui], unit, cfg, h, positions,
+                            plan, aux, params.get("shared"), memory)
+    h = mod.norm_apply(params["final_norm"], h)
+    return h, aux, offset
+
+
+def lm_loss(params, cfg: ModelConfig, batch, plan: ShardingPlan,
+            aux_weight: float = 0.01):
+    h, aux, off = forward_hidden(params, cfg, batch["tokens"], plan,
+                                 positions=batch.get("positions"),
+                                 frontend=batch.get("frontend"))
+    if off:
+        h = h[:, off:]
+    loss = mod.chunked_xent(params, h, batch["labels"], plan,
+                            softcap=cfg.final_softcap)
+    return loss + aux_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _cache_len_for(b: BlockSpec, cache_len: int) -> int:
+    if b.kind == "attn" and b.attn.window is not None:
+        return min(b.attn.window, cache_len)      # ring buffer
+    return cache_len
+
+
+def _block_cache_init(b: BlockSpec, batch: int, cache_len: int, cfg,
+                      dtype=jnp.bfloat16):
+    if b.kind == "attn":
+        L = _cache_len_for(b, cache_len)
+        K, D = b.attn.n_kv_heads, b.attn.head_dim
+        c = {"k": jnp.zeros((batch, L, K, D), dtype),
+             "v": jnp.zeros((batch, L, K, D), dtype)}
+        if b.cross_attn:
+            c["xk"] = jnp.zeros((batch, cfg.encoder.n_frames, K, D), dtype)
+            c["xv"] = jnp.zeros((batch, cfg.encoder.n_frames, K, D), dtype)
+        return c
+    if b.kind == "mla":
+        m = b.mla
+        return {"c_kv": jnp.zeros((batch, cache_len, m.kv_lora), dtype),
+                "k_rope": jnp.zeros((batch, cache_len, m.qk_rope), dtype)}
+    if b.kind == "mamba":
+        return M2.mamba2_cache_init(b.mamba, batch, dtype)
+    if b.kind == "rwkv":
+        return R6.rwkv6_cache_init(b.rwkv, batch, dtype)
+    raise ValueError(b.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    units = []
+    for unit in cfg.units:
+        def one(_):
+            return {f"b{i}": _block_cache_init(b, batch, cache_len, cfg,
+                                               dtype)
+                    for i, b in enumerate(unit.blocks)}
+        units.append(jax.vmap(one)(jnp.arange(unit.repeat)))
+    cache = {"units": units, "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.shared_block is not None:
+        cache["shared"] = _block_cache_init(cfg.shared_block, batch,
+                                            cache_len, cfg, dtype)
+    return cache
+
+
+def _ring_update(cache_seq, new, pos):
+    """Write (B,1,...) `new` at slot pos % L along axis 1 (shard-local)."""
+    return mod.masked_cache_write(cache_seq, new, pos % cache_seq.shape[1])
+
+
+def _attn_decode_windowed(bp, b: BlockSpec, x, pos, cache, plan):
+    """Decode against a ring-buffer cache of W slots."""
+    acfg = b.attn
+    q, k_new, v_new = mod._qkv(bp, acfg, x, pos[..., None], plan)
+    kc = _ring_update(cache["k"], k_new, pos)
+    vc = _ring_update(cache["v"], v_new, pos)
+    B, L, K, D = kc.shape
+    H = acfg.n_heads
+    G = H // K
+    scale = acfg.query_scale if acfg.query_scale is not None else D ** -0.5
+    # global position of ring slot s given current pos
+    slots = jnp.arange(L)
+    cur = pos[:, None] % L
+    g = jnp.where(slots[None] <= cur, pos[:, None] - cur + slots[None],
+                  pos[:, None] - cur - L + slots[None])
+    valid = (g >= 0) & (g > pos[:, None] - (acfg.window or L)) \
+        & (g <= pos[:, None])
+    qg = q.reshape(B, K, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, kc.astype(q.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, mod.NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(q.dtype),
+                     vc.astype(q.dtype)).reshape(B, 1, H, D)
+    y = jnp.einsum("bthk,hkd->btd", out, bp["attn"]["wo"].astype(x.dtype))
+    return plan.act_btd(y), {**cache, "k": kc, "v": vc}
+
+
+def _block_decode(bp, b: BlockSpec, h, pos, cache, plan, memory=None):
+    x = mod.norm_apply(bp["ln1"], h)
+    if b.kind == "attn":
+        if b.attn.window is not None and cache["k"].shape[1] < 1 << 30 \
+           and cache["k"].shape[1] <= b.attn.window:
+            y, nc = _attn_decode_windowed(bp, b, x, pos, cache, plan)
+        else:
+            y, nc = mod.attn_decode(bp, b.attn, x, pos,
+                                    {"k": cache["k"], "v": cache["v"]}, plan)
+            nc = {**cache, **nc}
+    elif b.kind == "mla":
+        y, nc = mod.mla_decode(bp, b.mla, x, pos, cache, plan)
+    elif b.kind == "mamba":
+        y, nc = M2.mamba2_decode(bp, b.mamba, x, cache, plan)
+    elif b.kind == "rwkv":
+        y, nc = R6.rwkv6_decode(bp, b.rwkv, x,
+                                {"sx": cache["sx"], "state": cache["state"]},
+                                plan)
+        nc = {**cache, **nc}
+    if b.post_norms:
+        y = mod.norm_apply(bp["ln1_post"], y)
+    h = h + y
+    if b.cross_attn:
+        xc = mod.norm_apply(bp["ln_x"], h)
+        B, L, K, D = cache["xk"].shape
+        H = b.attn.n_heads
+        ap = bp["cross"]["attn"]
+        qx = jnp.einsum("btd,dhk->bthk", xc, ap["wq"].astype(xc.dtype))[:, 0]
+        qg = qx.reshape(B, K, H // K, D)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, cache["xk"].astype(qx.dtype),
+                       preferred_element_type=jnp.float32) * D ** -0.5
+        w = jax.nn.softmax(s, -1)
+        o = jnp.einsum("bkgs,bskd->bkgd", w.astype(qx.dtype),
+                       cache["xv"].astype(qx.dtype)).reshape(B, 1, H, D)
+        h = h + jnp.einsum("bthk,hkd->btd", o, ap["wo"].astype(xc.dtype))
+    if b.mlp_kind == "none":
+        return h, nc
+    x2 = mod.norm_apply(bp["ln2"], h)
+    if b.mlp_kind == "dense":
+        y2 = mod.mlp_apply(bp, x2, plan, b.act)
+    elif b.mlp_kind == "moe":
+        y2, _ = mod.moe_apply(bp, b.moe, x2, plan)
+    elif b.mlp_kind == "rwkv_cmix":
+        y2, last = R6.rwkv6_cmix_apply(bp, b.rwkv, x2, plan,
+                                       last=cache.get("sx_cmix"))
+        nc = {**nc, "sx_cmix": last}
+    if b.post_norms:
+        y2 = mod.norm_apply(bp["ln2_post"], y2)
+    return h + y2, nc
+
+
+def serve_decode(params, cfg: ModelConfig, token, cache,
+                 plan: ShardingPlan):
+    """One decode step. token: (B,) int32; cache from init_cache/prefill.
+
+    Returns (logits (B, vocab), new_cache)."""
+    pos = cache["pos"]
+    h = mod.embed_apply(params, token[:, None], plan,
+                        scale=cfg.d_model ** 0.5 if cfg.embed_scale else None)
+    new_units = []
+    for ui, unit in enumerate(cfg.units):
+        def body(carry, xs):
+            hh = carry
+            pslice, cslice = xs
+            ncs = {}
+            for bi, b in enumerate(unit.blocks):
+                bp = params["shared"] if b.use_shared else pslice[f"b{bi}"]
+                cc = cslice[f"b{bi}"]
+                hh, nc = _block_decode(bp, b, hh, pos, cc, plan)
+                ncs[f"b{bi}"] = nc
+            return hh, ncs
+
+        h, nc_unit = jax.lax.scan(body, h,
+                                  (params["units"][ui], cache["units"][ui]))
+        new_units.append(nc_unit)
+    h = mod.norm_apply(params["final_norm"], h)
+    logits = mod.unembed_logits(params, h, plan, cfg.final_softcap)[:, 0]
+    new_cache = {**cache, "units": new_units, "pos": pos + 1}
+    return logits, new_cache
+
+
+def serve_prefill(params, cfg: ModelConfig, tokens, plan: ShardingPlan,
+                  frontend=None):
+    """Prefill: full forward returning last-position logits (cache writing
+    is elided — the dry-run measures the prefill compute path; a serving
+    deployment would fuse cache emission into the same scan)."""
+    h, _, off = forward_hidden(params, cfg, tokens, plan, frontend=frontend)
+    logits = mod.unembed_logits(params, h[:, -1:], plan, cfg.final_softcap)
+    return logits[:, 0]

@@ -1,0 +1,77 @@
+"""AdamW on pytrees with sharded, reduced-precision moments.
+
+Moments inherit each parameter's sharding (TP/EP/FSDP placement comes for
+free); `moment_dtype=bf16` halves optimizer memory — with stochastic-free
+bf16 moments the update noise is well below gradient noise at our scales
+(standard large-model practice; the f32 master params remain exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Any = jnp.bfloat16
+    warmup_steps: int = 100
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig
+                 ) -> Tuple[Any, Dict, Dict]:
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * clip
+        mu32 = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu32 = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        new_p = (p.astype(jnp.float32)
+                 - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                         + cfg.weight_decay * p.astype(jnp.float32)))
+        return (new_p.astype(p.dtype), mu32.astype(mu.dtype),
+                nu32.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, opt_state["mu"], opt_state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"mu": new_mu, "nu": new_nu, "step": step}, \
+        {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,1 @@
+from .sharding import ShardingPlan  # noqa: F401

@@ -1,0 +1,64 @@
+"""Adaptive codebook policy (chi thresholds) + offline codebook quality."""
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveCoder, Codebook, build_offline_codebook,
+                        default_offline_codebook, np_dual_quantize,
+                        sigma_of)
+from repro.data import fields as F
+
+
+def _freqs(arr, rel=1e-4):
+    eb = rel * float(arr.max() - arr.min())
+    codes, _, _ = np_dual_quantize(arr, eb, min(arr.ndim, 3))
+    return np.bincount(codes.reshape(-1), minlength=1024)
+
+
+@pytest.fixture(scope="module")
+def offline():
+    return default_offline_codebook()
+
+
+def test_policy_transitions(offline):
+    coder = AdaptiveCoder(offline, tau0=2.3, tau1=8.0)
+    fa = _freqs(F.brown_proxy(seed=1))
+    fb = _freqs(F.hacc_proxy(seed=2))
+    d1 = coder.step(fa)
+    assert d1.action == "offline"                  # stream start bridge
+    d2 = coder.step(fa)
+    assert d2.action == "rebuild"                  # warm-up build
+    d3 = coder.step(fa)
+    assert d3.action == "keep"                     # stable stream
+    d4 = coder.step(fb)                            # drastic change
+    assert d4.action in ("offline", "rebuild")
+    assert d4.chi > 0
+
+
+def test_offline_codebook_covers_everything(offline):
+    assert (offline.lengths > 0).all()             # smoothed: full coverage
+    assert offline.lengths.max() <= 16
+
+
+def test_offline_codebook_quality(offline):
+    """Offline codewords must be within ~60% of per-dataset optimal
+    (paper Fig 10 reports 23-52% CR drop — same ballpark)."""
+    for name, arr in F.sdrbench_proxy_corpus(size="small"):
+        freqs = _freqs(arr)
+        ideal = Codebook.from_freqs(freqs, exact=True)
+        assert offline.mean_bits(freqs) <= \
+            max(ideal.mean_bits(freqs), 0.8) * 2.6, name
+
+
+def test_sigma_chunk_size_invariance():
+    arr = F.cesm_proxy(seed=3)
+    f_full = _freqs(arr)
+    f_half = _freqs(arr[:arr.shape[0] // 2])
+    # normalized sigma must not depend on chunk size (unlike raw counts)
+    assert abs(sigma_of(f_full) - sigma_of(f_half)) \
+        < 0.35 * max(sigma_of(f_full), 1e-9)
+
+
+def test_build_offline_codebook_aligns_bitrates():
+    corpus = [a for _, a in F.sdrbench_proxy_corpus(size="small")][:3]
+    cb = build_offline_codebook(corpus, target_bitrate=3.0)
+    assert (cb.lengths > 0).all()

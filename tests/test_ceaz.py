@@ -1,0 +1,107 @@
+"""CEAZ facade: error-bounded guarantee, fixed-ratio, adaptivity, rate law."""
+import numpy as np
+import pytest
+
+from repro.core import (CEAZ, CEAZConfig, default_offline_codebook,
+                        max_abs_err, np_dual_quantize, entropy_bits, psnr)
+from repro.data import fields as F
+
+
+@pytest.fixture(scope="module")
+def offline_cb():
+    return default_offline_codebook()
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return F.sdrbench_proxy_corpus(seed=0, size="small")
+
+
+@pytest.mark.parametrize("eb", [1e-3, 1e-4])
+def test_error_bound_guaranteed(corpus, offline_cb, eb):
+    comp = CEAZ(CEAZConfig(mode="rel", eb=eb, chunk_bytes=1 << 19),
+                offline_codebook=offline_cb)
+    for name, arr in corpus:
+        c = comp.compress(arr)
+        rec = comp.decompress(c)
+        bound = eb * float(arr.max() - arr.min())
+        assert max_abs_err(arr, rec) <= bound, name
+        assert rec.shape == arr.shape and rec.dtype == arr.dtype
+
+
+def test_float64_roundtrip(offline_cb, rng):
+    x = np.cumsum(rng.standard_normal(100000)).astype(np.float64) / 100
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-5), offline_codebook=offline_cb)
+    c = comp.compress(x)
+    assert c.word_bits == 64
+    rec = comp.decompress(c)
+    assert max_abs_err(x, rec) <= 1e-5 * (x.max() - x.min())
+
+
+def test_fixed_ratio_static_and_accurate(offline_cb):
+    arr = F.cesm_proxy(seed=3)
+    comp = CEAZ(CEAZConfig(mode="fixed_ratio", target_ratio=10.5,
+                           chunk_bytes=1 << 17), offline_codebook=offline_cb)
+    c = comp.compress(arr)
+    assert abs(c.ratio() / 10.5 - 1) <= 0.15          # paper's acceptance
+    rec = comp.decompress(c)
+    assert rec.shape == arr.shape
+    # every chunk respects its own (adaptive) bound
+    assert np.isfinite(rec).all()
+
+
+def test_adaptive_actions_on_drifting_stream(offline_cb):
+    """offline bridge -> rebuild -> keep on stable stream; offline reset on
+    a drastic distribution change (the 3-way chi policy)."""
+    a = F.brown_proxy(seed=1).reshape(-1)
+    b = (F.hacc_proxy(seed=2).reshape(-1)) / 300.0
+    stream = np.concatenate([a, a, a, b, b]).astype(np.float32)
+    comp = CEAZ(CEAZConfig(mode="abs", eb=2e-4, chunk_bytes=a.nbytes),
+                offline_codebook=offline_cb)
+    c = comp.compress(stream)
+    actions = [ch.action for ch in c.chunks]
+    assert actions[0] == "offline"
+    assert "rebuild" in actions[1:]
+    rec = comp.decompress(c)
+    assert max_abs_err(stream, rec) <= 2e-4
+
+
+def test_rate_law(corpus):
+    """B(2*eb) ~= B(eb) - 1 on Lorenzo-friendly fields (paper Eq. 2)."""
+    errs = []
+    for name, arr in corpus:
+        if name in ("nwchem",):        # spike-dominated: law holds loosely
+            continue
+        vr = float(arr.max() - arr.min())
+        bs = []
+        for eb in (1e-4 * vr, 2e-4 * vr):
+            codes, outl, _ = np_dual_quantize(arr, eb, min(arr.ndim, 3))
+            bs.append(entropy_bits(np.bincount(codes.reshape(-1),
+                                               minlength=1024)))
+        errs.append(abs((bs[0] - bs[1]) - 1.0))
+    assert np.mean(errs) < 0.25, errs
+
+
+def test_predictor_auto_picks_value_mode_for_noise(offline_cb, rng):
+    noise = rng.standard_normal(200000).astype(np.float32)
+    auto = CEAZ(CEAZConfig(mode="rel", eb=1e-3, predictor="auto"),
+                offline_codebook=offline_cb)
+    lor = CEAZ(CEAZConfig(mode="rel", eb=1e-3, predictor="lorenzo"),
+               offline_codebook=offline_cb)
+    ca, cl = auto.compress(noise), lor.compress(noise)
+    assert ca.predictor == "none"
+    assert ca.ratio() > cl.ratio()
+    rec = auto.decompress(ca)
+    assert max_abs_err(noise, rec) <= 1e-3 * (noise.max() - noise.min())
+
+
+def test_compressed_size_accounting(offline_cb):
+    """total_bits must cover payload + codebooks + outliers + headers."""
+    arr = F.s3d_proxy(seed=4)
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, chunk_bytes=1 << 18),
+                offline_codebook=offline_cb)
+    c = comp.compress(arr)
+    payload = sum(ch.payload_bits() for ch in c.chunks)
+    assert c.total_bits() > payload
+    stored_books = sum(ch.codebook_lengths is not None for ch in c.chunks)
+    assert c.total_bits() >= payload + stored_books * 5 * 1024

@@ -1,0 +1,96 @@
+"""Per-kernel sweeps: Pallas (interpret=True) vs pure-jnp ref oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import huffman as H
+from repro.kernels.bitpack import kernel as BK, ops as BO, ref as BR
+from repro.kernels.dualquant import kernel as DK, ops as DO, ref as DR
+from repro.kernels.histogram import ops as HO
+from repro.kernels.hufenc import kernel as EK, ops as EO, ref as ER
+
+
+def _smooth(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return np.cumsum(x, axis=-1).astype(np.float32) / 20
+
+
+@pytest.mark.parametrize("shape", [(8, 512), (16, 1024), (32, 1536)])
+@pytest.mark.parametrize("eb", [1e-2, 1e-3, 1e-4])
+def test_dq1d_kernel_vs_ref(shape, eb, rng):
+    x = _smooth(rng, shape)
+    k = DK.dq1d(jnp.asarray(x), eb)
+    r = DR.dq1d(jnp.asarray(x), eb)
+    for a, b in zip(k, r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("shape", [(8, 512), (24, 1024)])
+@pytest.mark.parametrize("eb", [1e-2, 1e-4])
+def test_dq2d_kernel_vs_ref_and_core(shape, eb, rng):
+    from repro.core import dualquant as CDQ
+    x = np.cumsum(_smooth(rng, shape), axis=0)
+    k = DK.dq2d(jnp.asarray(x), eb)
+    r = DR.dq2d(jnp.asarray(x), eb)
+    c = CDQ.dual_quantize(jnp.asarray(x), eb, 2)
+    for a, b in zip(k, r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(k[0]), np.asarray(c[0]))
+
+
+@pytest.mark.parametrize("n", [100, 4096, 100001])
+def test_stream_roundtrip(n, rng):
+    x = np.cumsum(rng.standard_normal(n)).astype(np.float32) / 10
+    eb = 1e-3
+    codes, outl, delta = DO.stream_quantize(jnp.asarray(x), eb)
+    rec = DO.stream_dequantize(delta, eb)
+    # raw-layer bound: eb + 0.5 ulp (f32 midpoints; facade patches these)
+    ulp = float(np.spacing(np.abs(x).max()))
+    assert float(jnp.abs(rec - x).max()) <= eb + ulp
+
+
+@pytest.mark.parametrize("n", [1, 1000, 65536])
+def test_histogram_kernel(n, rng):
+    codes = rng.integers(0, 1024, n).astype(np.int32)
+    h = np.asarray(HO.histogram(jnp.asarray(codes)))
+    np.testing.assert_array_equal(h, np.bincount(codes, minlength=1024))
+
+
+@pytest.mark.parametrize("sigma", [3, 30, 300])
+def test_hufenc_kernel_vs_ref_and_host_decode(sigma, rng):
+    x = np.clip(rng.normal(512, sigma, 8192), 0, 1023).astype(np.int64)
+    cb = H.Codebook.from_freqs(np.bincount(x, minlength=1024))
+    codes = x.reshape(2, 4096).astype(np.int32)
+    wk, nk = EK.hufenc(jnp.asarray(codes), jnp.asarray(cb.codes),
+                       jnp.asarray(cb.lengths))
+    wr, nr = ER.hufenc(jnp.asarray(codes), jnp.asarray(cb.codes),
+                       jnp.asarray(cb.lengths))
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+    stream, _ = EO.to_host_stream(wk, nk, len(x), cb.lengths)
+    dec = H.decode(stream, np.asarray(nk, np.int64), len(x), 4096, cb)
+    assert np.array_equal(dec, x.astype(np.uint16))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [7, 4096, 50000])
+def test_bitpack_roundtrip_and_ref(bits, n, rng):
+    v = rng.integers(0, 1 << bits, n).astype(np.int32)
+    w = BO.pack_flat(jnp.asarray(v), bits)
+    u = BO.unpack_flat(w, n, bits)
+    np.testing.assert_array_equal(np.asarray(u), v)
+    rows = BO.packed_rows(n, bits)
+    vals = np.zeros(rows * (32 // bits) * BK.LANES, np.int32)
+    vals[:n] = v
+    wref = BR.pack(jnp.asarray(vals.reshape(rows, 32 // bits, BK.LANES)),
+                   bits)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(wref))
+
+
+def test_bitpack_jnp_twin_matches_kernel(rng):
+    """grad_compress's in-SPMD pack must agree with the Pallas kernel."""
+    from repro.optim.grad_compress import pack_jnp, unpack_jnp
+    v = rng.integers(0, 256, 13000).astype(np.int32)
+    w_jnp = np.asarray(pack_jnp(jnp.asarray(v), 8))
+    u = np.asarray(unpack_jnp(jnp.asarray(w_jnp), len(v), 8))
+    np.testing.assert_array_equal(u, v)

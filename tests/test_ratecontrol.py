@@ -1,0 +1,65 @@
+"""Rate-control theory: B' = B - log2(N) law, one-shot calibration,
+closed-loop controller convergence, min-update-size rule."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import (FixedRatioController, bitrate_from_ratio,
+                        calibrate_eb_for_bitrate, entropy_bits,
+                        min_update_bytes, np_dual_quantize, predict_bitrate,
+                        predict_eb, ratio_from_bitrate)
+from repro.data import fields as F
+
+
+def test_predict_eb_inverse_of_predict_bitrate():
+    eb = 1e-4
+    for shift in (-2.0, -0.5, 1.0, 3.3):
+        eb2 = eb * 2.0 ** shift
+        b2 = predict_bitrate(6.0, eb, eb2)
+        assert abs(predict_eb(eb, 6.0, b2) / eb2 - 1) < 1e-9
+
+
+def test_rate_law_on_smooth_field():
+    arr = F.cesm_proxy(seed=3)          # wide histogram => law is exact
+    vr = float(arr.max() - arr.min())
+    ebs = [3e-5 * vr * 2 ** k for k in range(4)]
+    bs = []
+    for eb in ebs:
+        codes, _, _ = np_dual_quantize(arr, eb, 2)
+        bs.append(entropy_bits(np.bincount(codes.reshape(-1), minlength=1024)))
+    diffs = np.diff(bs)
+    assert np.allclose(diffs, -1.0, atol=0.25), bs
+
+
+def test_one_shot_calibration_hits_target():
+    arr = F.cesm_proxy(seed=3)
+    target_b = 4.0
+    eb = calibrate_eb_for_bitrate(arr, target_b, 2)
+    codes, _, _ = np_dual_quantize(arr, eb, 2)
+    b = entropy_bits(np.bincount(codes.reshape(-1), minlength=1024))
+    assert abs(b - target_b) < 0.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(2.0, 20.0), st.floats(1.5, 10.0))
+def test_controller_converges(target_b, start_b):
+    """Feedback loop drives a synthetic 'achieved = target_of(eb)' plant
+    obeying the rate law toward the target bitrate."""
+    ctrl = FixedRatioController(target_bitrate=target_b, eb=1e-4)
+    eb0, b0 = 1e-4, start_b
+    achieved = None
+    for _ in range(15):
+        achieved = b0 - np.log2(ctrl.eb / eb0)      # exact-law plant
+        ctrl.feedback(achieved)
+    assert abs(achieved - target_b) < 0.15
+
+
+def test_min_update_bytes_rule():
+    """Paper example: 1k symbols x 8-bit codewords, CR 10 => N > 24k."""
+    n = min_update_bytes(target_ratio=10.0, word_bits=32, codeword_bits=8)
+    assert n >= 24000 * 4 * 0.9
+
+
+def test_ratio_bitrate_duality():
+    for r in (2.0, 10.0, 33.3):
+        assert abs(ratio_from_bitrate(bitrate_from_ratio(r)) - r) < 1e-9
