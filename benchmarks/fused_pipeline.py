@@ -1,0 +1,68 @@
+"""Fused vs staged CEAZ pipeline throughput (the point of CEAZ Fig 4).
+
+Compares three configurations on the proxy corpus:
+
+  * staged/numpy — the original host orchestration (numpy dual-quant,
+    numpy Huffman pack, Python loop over chunks);
+  * staged/jax   — per-stage device offload with a host round-trip
+    between every stage (what `use_fused=False, backend='jax'` does);
+  * fused        — the device-resident pipeline of runtime/fused.py: one
+    traced quantize+histogram pass, host chi policy on the histogram
+    summaries only, one traced encode+pack pass.
+
+The fused column must dominate staged/jax (same math, no per-stage
+round-trips) — asserted at the end, since CI runs this as the
+fused-pipeline acceptance gate. jit compilation is warmed before timing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CEAZ, CEAZConfig, default_offline_codebook
+
+from .common import corpus, emit, time_call
+
+
+def _comp(offline_cb, **kw):
+    return CEAZ(CEAZConfig(mode="rel", eb=1e-4, chunk_bytes=1 << 21,
+                           predictor="lorenzo", **kw),
+                offline_codebook=offline_cb)
+
+
+def run():
+    offline_cb = default_offline_codebook()
+    variants = {
+        "staged_numpy": _comp(offline_cb, backend="numpy", use_fused=False),
+        "staged_jax": _comp(offline_cb, backend="jax", use_fused=False),
+        "fused": _comp(offline_cb, use_fused=True),
+    }
+    rows = []
+    totals = {k: [0.0, 0] for k in variants}
+    for name, arr in corpus():
+        arr = arr.astype(np.float32)
+        for vname, comp in variants.items():
+            comp.compress(arr)                       # warm jit caches
+            c, t = time_call(comp.compress, arr, repeats=3)
+            rows.append(dict(kind="dataset", dataset=name, variant=vname,
+                             mb=arr.nbytes / 1e6, seconds=t,
+                             throughput_mbs=arr.nbytes / t / 1e6,
+                             ratio=c.ratio()))
+            totals[vname][0] += t
+            totals[vname][1] += arr.nbytes
+    tp = {k: v[1] / v[0] / 1e6 for k, v in totals.items()}
+    speedup = tp["fused"] / tp["staged_jax"]
+    rows.append(dict(kind="summary", **{f"tp_{k}": v for k, v in tp.items()},
+                     fused_over_staged_jax=speedup))
+    emit("fused_pipeline", rows,
+         us_per_call=float(totals["fused"][0] * 1e6 / max(len(rows) - 1, 1)),
+         derived=(f"fused={tp['fused']:.0f}MB/s;"
+                  f"staged_jax={tp['staged_jax']:.0f}MB/s;"
+                  f"staged_numpy={tp['staged_numpy']:.0f}MB/s;"
+                  f"speedup={speedup:.2f}x"))
+    assert speedup >= 1.0, (
+        f"fused pipeline slower than staged ({speedup:.2f}x)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,9 +11,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (chi_thresholds, fixed_ratio, offline_codewords,
-                   parallel_io, ratio_distortion, roofline_report,
-                   sort_latency, symbol_hist, throughput, update_size)
+    from . import (chi_thresholds, fixed_ratio, fused_pipeline,
+                   offline_codewords, parallel_io, ratio_distortion,
+                   roofline_report, sort_latency, symbol_hist, throughput,
+                   update_size)
     suites = [
         ("sort_latency(Fig6/Alg1)", sort_latency.run),
         ("symbol_hist(Fig7)", symbol_hist.run),
@@ -23,6 +24,7 @@ def main() -> None:
         ("fixed_ratio(Fig13)", fixed_ratio.run),
         ("ratio_distortion(Fig14/T4/T5)", ratio_distortion.run),
         ("throughput(Fig15/16,T6/T7)", throughput.run),
+        ("fused_pipeline(Fig4)", fused_pipeline.run),
         ("parallel_io(Fig17)", parallel_io.run),
         ("roofline_report(dry-run)", roofline_report.run),
     ]

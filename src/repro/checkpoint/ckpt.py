@@ -41,6 +41,7 @@ import jax
 import numpy as np
 
 from ..core import CEAZ, CEAZConfig
+from ..runtime import compat
 from ..runtime.sharding import ShardingPlan, param_shardings
 
 LATEST = "LATEST"
@@ -55,12 +56,17 @@ class CheckpointConfig:
     predictor: str = "auto"        # weights are noise-like => value-direct
     min_compress: int = 4096       # leaves smaller than this stored raw
     chunk_bytes: int = 1 << 22
+    # device-resident fused pipeline for float32 Lorenzo leaves (smooth
+    # fields such as embedding tables / activations snapshots); the
+    # value-direct leaves the auto predictor selects stay on the staged
+    # host path (float64 semantics).
+    use_fused: bool = True
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = jax.tree_util.keystr(path, simple=True, separator="/")
+        key = compat.keystr(path)
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -72,7 +78,8 @@ def _treedef_of(tree):
 def _compressor(cfg: CheckpointConfig) -> CEAZ:
     return CEAZ(CEAZConfig(mode="rel", eb=cfg.eb,
                            chunk_bytes=cfg.chunk_bytes,
-                           predictor=cfg.predictor))
+                           predictor=cfg.predictor,
+                           use_fused=cfg.use_fused))
 
 
 def _encode_leaf(key: str, arr: np.ndarray, cfg: CheckpointConfig,

@@ -116,6 +116,13 @@ class CEAZConfig:
     predictor: str = "lorenzo"        # 'lorenzo' | 'none' | 'auto'
     # 'none' quantizes values directly (noise-like data: weights/moments);
     # 'auto' probes a sample chunk and picks the lower-entropy predictor
+    # Device-resident fused pipeline (runtime/fused.py): per-value work
+    # (dual-quant -> histogram -> Huffman -> bit-pack) runs as jitted
+    # batched device passes; only histograms and the final payload cross
+    # the host boundary. Applies to float32 Lorenzo compression; float64
+    # and value-direct inputs fall back to the staged path below, which
+    # also remains the bit-exactness reference (see tests/test_fused.py).
+    use_fused: bool = False
 
 
 class CEAZ:
@@ -191,22 +198,41 @@ class CEAZ:
         if x.dtype not in (np.float32, np.float64):
             raise TypeError(f"CEAZ compresses float data, got {x.dtype}")
         word_bits = x.dtype.itemsize * 8
+        fused_ok = self.cfg.use_fused and x.dtype == np.float32
         if self.cfg.mode in ("abs", "rel"):
             pred = self._pick_predictor(x, self._abs_eb(x))
             if pred == "none":
                 return self._compress_eb_direct(x, word_bits)
+            if fused_ok:
+                return self._compress_eb_fused(x)
             return self._compress_eb(x, word_bits)
         if self.cfg.mode == "fixed_ratio":
-            return self._compress_fixed_ratio(x, word_bits)
+            return self._compress_fixed_ratio(x, word_bits,
+                                              use_fused=fused_ok)
         raise ValueError(self.cfg.mode)
+
+    def _coder(self) -> AdaptiveCoder:
+        return AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
+                             self.cfg.exact_build)
+
+    def _chunk_values(self, word_bits: int) -> int:
+        return max(self.cfg.chunk_bytes // (word_bits // 8),
+                   self.cfg.block_size)
+
+    def _compress_eb_fused(self, x: np.ndarray) -> CEAZCompressed:
+        """Policy stays here; all per-value work runs device-resident."""
+        from ..runtime import fused
+        return fused.compress_error_bounded(
+            x, self._abs_eb(x), self.cfg.mode, self._coder(),
+            self._chunk_values(32), self.cfg.block_size,
+            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build)
 
     def _compress_eb_direct(self, x: np.ndarray,
                             word_bits: int) -> CEAZCompressed:
         """predictor='none': per-chunk value-direct quantization."""
         flat = x.reshape(-1)
         eb = self._abs_eb(x)
-        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
-                              self.cfg.exact_build)
+        coder = self._coder()
         cv = max(self.cfg.chunk_bytes // (word_bits // 8),
                  self.cfg.block_size)
         chunks, lit_idx, lit_val = [], [], []
@@ -238,8 +264,7 @@ class CEAZ:
         codes_f = codes.reshape(-1)
         delta_f = delta.reshape(-1)
         outl_f = outlier.reshape(-1)
-        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
-                              self.cfg.exact_build)
+        coder = self._coder()
         cv = max(self.cfg.chunk_bytes // (word_bits // 8), self.cfg.block_size)
         chunks = []
         for s in range(0, len(codes_f), cv):
@@ -255,8 +280,8 @@ class CEAZ:
                               literal_idx=viol.astype(np.int64),
                               literal_val=x.reshape(-1)[viol].copy())
 
-    def _compress_fixed_ratio(self, x: np.ndarray,
-                              word_bits: int) -> CEAZCompressed:
+    def _compress_fixed_ratio(self, x: np.ndarray, word_bits: int,
+                              use_fused: bool = False) -> CEAZCompressed:
         flat = x.reshape(-1)
         target_b = bitrate_from_ratio(self.cfg.target_ratio, word_bits)
         # seed eb via one-shot rate law on the first chunk sample
@@ -265,8 +290,13 @@ class CEAZ:
         sample = flat[:min(len(flat), cv)]
         eb = calibrate_eb_for_bitrate(sample, target_b, 1)
         ctrl = FixedRatioController(target_bitrate=target_b, eb=eb)
-        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
-                              self.cfg.exact_build)
+        coder = self._coder()
+        if use_fused:
+            from ..runtime import fused
+            return fused.compress_fixed_ratio(
+                x, ctrl, coder, cv, self.cfg.block_size,
+                adaptive=self.cfg.adaptive,
+                exact_build=self.cfg.exact_build)
         chunks, lit_idx, lit_val = [], [], []
         for s in range(0, len(flat), cv):
             e = min(s + cv, len(flat))
@@ -289,8 +319,6 @@ class CEAZ:
 
     def decompress(self, c: CEAZCompressed) -> np.ndarray:
         out_dtype = np.dtype(c.dtype)
-        coder = AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
-                              self.cfg.exact_build)
         # replay the codebook sequence exactly as the encoder chose it
         books: List[Codebook] = []
         current = self.offline

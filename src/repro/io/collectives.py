@@ -25,6 +25,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.dualquant import ops as dq_ops
 from ..optim.grad_compress import pack_jnp, unpack_jnp
+from ..runtime import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,9 +78,36 @@ def compressed_all_gather(x, mesh: Mesh, axis: str,
         return dec.reshape((-1,) + x_loc.shape)
 
     spec = P(axis, *([None] * (len(shape) - 1)))
-    return jax.shard_map(per_rank, mesh=mesh, in_specs=spec,
-                         out_specs=P(None, axis),
-                         axis_names={axis})(x)
+    return compat.shard_map(per_rank, mesh=mesh, in_specs=spec,
+                            out_specs=P(None, axis),
+                            axis_names={axis})(x)
+
+
+def ceaz_gather(shards, eb_rel: float = 1e-4, plan=None,
+                chunk_values: int = 1 << 20, block_size: int = 4096):
+    """Host-level compressed gather: the paper's MPI_Gather scenario.
+
+    Every rank's shard is compressed through the device-resident fused
+    pipeline in ONE batched trace (mesh-sharded when `plan` carries a
+    mesh), then only the packed payloads are 'gathered' (returned with
+    wire-size stats). Ranks with unequal shard shapes (the usual
+    smaller-last-rank case) fall back to per-rank fused passes.
+    Returns (compressed_list, stats) where stats reports raw vs wire
+    bytes — the paper's Fig 17 quantity.
+    """
+    from ..runtime import fused
+    shards = list(shards)
+    if len({np.asarray(s).shape for s in shards}) == 1:
+        comps = fused.batch_compress(shards, eb_rel, chunk_values,
+                                     block_size, plan=plan)
+    else:
+        comps = [c for s in shards
+                 for c in fused.batch_compress(
+                     [np.asarray(s)], eb_rel, chunk_values, block_size)]
+    raw = sum(int(np.asarray(s).nbytes) for s in shards)
+    wire = sum(c.nbytes() for c in comps)
+    return comps, dict(raw_bytes=raw, wire_bytes=wire,
+                       ratio=raw / max(wire, 1), n_ranks=len(comps))
 
 
 @dataclasses.dataclass

@@ -22,18 +22,50 @@ from ..core import CEAZ, CEAZConfig
 
 def parallel_compressed_write(directory: str, shards: Sequence[np.ndarray],
                               comp: Optional[CEAZ] = None,
-                              workers: int = 4) -> dict:
-    """Compress + write shards concurrently; returns timing/size stats."""
-    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4))
+                              workers: int = 4, use_fused: bool = True,
+                              plan=None) -> dict:
+    """Compress + write shards concurrently; returns timing/size stats.
+
+    With ``use_fused`` (default) and homogeneous float32 shards, the
+    compression stage runs as ONE device-resident fused batch over all
+    shards (optionally mesh-sharded via `plan`); only the file writes
+    stay on the worker threads. Heterogeneous/float64 inputs keep the
+    per-shard staged path.
+    """
+    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
     os.makedirs(directory, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_dump_")
     t0 = time.perf_counter()
 
+    # The batched path must honor the caller's compressor policy: it is
+    # taken only for configs it can express (fused rel-mode Lorenzo; the
+    # chi thresholds and build flags are forwarded). Anything else —
+    # value-direct/auto predictor, float64, ragged shards, use_fused
+    # off — keeps per-shard comp.compress semantics.
+    fused_ok = (use_fused and comp.cfg.use_fused
+                and comp.cfg.mode == "rel"
+                and comp.cfg.predictor == "lorenzo"
+                and len({s.shape for s in shards}) == 1
+                and all(s.dtype == np.float32 for s in shards))
+    precomp: List[Optional[object]] = [None] * len(shards)
+    if fused_ok:
+        from ..runtime import fused
+        cv = max(comp.cfg.chunk_bytes // 4, comp.cfg.block_size)
+        tc0 = time.perf_counter()
+        precomp = fused.batch_compress(
+            list(shards), comp.cfg.eb, cv, comp.cfg.block_size,
+            offline=comp.offline, plan=plan,
+            tau0=comp.cfg.tau0, tau1=comp.cfg.tau1,
+            adaptive=comp.cfg.adaptive,
+            exact_build=comp.cfg.exact_build)
+        tc_batch = (time.perf_counter() - tc0) / max(len(shards), 1)
+
     def write_one(i_shard):
         i, shard = i_shard
         t = time.perf_counter()
-        c = comp.compress(shard)
-        tc = time.perf_counter() - t
+        c = precomp[i] if precomp[i] is not None else comp.compress(shard)
+        tc = (tc_batch if precomp[i] is not None
+              else time.perf_counter() - t)
         path = os.path.join(tmp, f"shard_{i:05d}.ceaz")
         with open(path, "wb") as f:
             pickle.dump(c, f, protocol=4)

@@ -17,6 +17,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..models import transformer as T
+from ..runtime import compat
 from ..runtime.sharding import ShardingPlan
 
 
@@ -37,7 +38,7 @@ def cache_shardings(cache, plan: ShardingPlan, batch_sharded: bool = True):
     msize = plan.model_size
 
     def leaf_spec(path, leaf) -> P:
-        keys = jax.tree_util.keystr(path, simple=True, separator="/")
+        keys = compat.keystr(path)
         nd = len(leaf.shape)
         name = keys.split("/")[-1]
         shape = leaf.shape

@@ -23,6 +23,7 @@ from ..data.synthetic import DataConfig, ShardedDataset, batch_for_step
 from ..models import transformer as T
 from ..optim import (AdamWConfig, CompressionConfig, adamw_init,
                      adamw_update, compressed_cross_pod_mean, ef_init)
+from ..runtime import compat
 from ..runtime.sharding import ShardingPlan, make_plan, param_shardings
 from . import mesh as mesh_lib
 
@@ -116,7 +117,7 @@ def make_train_step(model_cfg, train_cfg: TrainConfig, plan: ShardingPlan):
 
             batch_specs = jax.tree.map(
                 lambda x: P(*("pod",) + (None,) * (x.ndim - 1)), batch)
-            loss, metr, grads, new_res = jax.shard_map(
+            loss, metr, grads, new_res = compat.shard_map(
                 per_pod,
                 mesh=plan.mesh,
                 in_specs=(P(), P(), batch_specs),

@@ -104,9 +104,14 @@ def compressed_cross_pod_mean(grads, residual, cfg: CompressionConfig,
     §Perf cell 3). Intra-pod resharding rides the fast ICI; only packed
     payloads cross the DCI pod axis.
     """
-    n_pods = jax.lax.axis_size(cfg.axis)
+    from ..runtime import compat
+    n_pods = compat.axis_size(cfg.axis)  # noqa: F841 — asserts axis is live
     per = 32 // cfg.bits
-    if plan is not None and plan.mesh is not None:
+    # Sharding constraints inside a partially-manual shard_map are only
+    # supported on new jax (old XLA check-fails on IsManualSubgroup);
+    # without them the pack replicates first — slower wire, same math.
+    if (plan is not None and plan.mesh is not None
+            and compat.supports_partial_manual_constraints()):
         local = int(np.prod([plan.axis_size(a)
                              for a in plan.mesh.axis_names
                              if a != cfg.axis]))
@@ -164,3 +169,45 @@ def compressed_cross_pod_mean(grads, residual, cfg: CompressionConfig,
 def payload_fraction(bits: int) -> float:
     """Wire bytes vs uncompressed bf16 exchange."""
     return bits / 16.0
+
+
+# ---------------------------------------------------------------------------
+# Gradient snapshots through the fused CEAZ pipeline (offload path).
+# The inline DCI exchange above must stay pure-jnp so GSPMD can shard it;
+# host-side gradient dumps (divergence debugging, replay, offline
+# analysis) have no such constraint and ride the device-resident fused
+# pipeline instead of a staged host loop.
+# ---------------------------------------------------------------------------
+
+def snapshot_grads(grads, eb_rel: float = 1e-3,
+                   chunk_bytes: int = 1 << 22,
+                   min_compress: int = 4096):
+    """-> {path: CEAZCompressed | np.ndarray} for a gradient pytree.
+
+    Float32 leaves >= min_compress elements are CEAZ-compressed with the
+    fused pipeline (the auto predictor routes noise-like leaves to the
+    value-direct host path, smooth ones to the fused Lorenzo path);
+    small leaves are stored raw.
+    """
+    from ..core import CEAZ, CEAZConfig
+    from ..runtime import compat
+    comp = CEAZ(CEAZConfig(mode="rel", eb=eb_rel, chunk_bytes=chunk_bytes,
+                           predictor="auto", use_fused=True))
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        key = compat.keystr(path)
+        arr = np.asarray(leaf)
+        if (arr.dtype == np.float32 and arr.size >= min_compress
+                and np.all(np.isfinite(arr))):
+            out[key] = comp.compress(arr)
+        else:
+            out[key] = arr
+    return out
+
+
+def restore_grad_snapshot(snapshot):
+    """Inverse of snapshot_grads (flat dict of arrays)."""
+    from ..core import CEAZ, CEAZCompressed
+    comp = CEAZ()
+    return {k: (comp.decompress(v) if isinstance(v, CEAZCompressed) else v)
+            for k, v in snapshot.items()}

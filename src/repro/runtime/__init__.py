@@ -1,1 +1,2 @@
+from . import compat  # noqa: F401
 from .sharding import ShardingPlan  # noqa: F401

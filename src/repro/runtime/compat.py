@@ -1,0 +1,99 @@
+"""Compatibility shims across the jax release range we support.
+
+The repo targets current jax APIs (`jax.shard_map`, `jax.lax.pvary`,
+keyword-rich `keystr`) but must also run on the 0.4.x series where those
+live under `jax.experimental.shard_map` / don't exist. Every call site
+imports from here instead of feature-testing jax inline.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+__all__ = ["shard_map", "pvary", "keystr", "get_abstract_mesh",
+           "axis_size", "supports_partial_manual_constraints"]
+
+
+def axis_size(axis_name):
+    """`jax.lax.axis_size` with a psum(1) fallback for old jax."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: Optional[bool] = None):
+    """`jax.shard_map` with fallback to `jax.experimental.shard_map`.
+
+    On old jax, `axis_names` maps onto the `auto=` complement (axes not
+    named stay automatically partitioned) and `check_vma` onto
+    `check_rep`; replication checking is disabled by default there because
+    the old checker rejects valid psum/ppermute patterns the new one
+    accepts.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {"check_rep": bool(check_vma) if check_vma is not None else False}
+    if axis_names is not None and mesh is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def supports_partial_manual_constraints() -> bool:
+    """Whether with_sharding_constraint is usable inside a partially-
+    manual shard_map. Old XLA check-fails (IsManualSubgroup) on that
+    combination; new-style `jax.shard_map` availability tracks the fixed
+    partitioner. Call sites must use this predicate, not hasattr(jax,
+    ...) inline, so the detection strategy stays in one place."""
+    return hasattr(jax, "shard_map")
+
+
+def pvary(x, axis_name):
+    """`jax.lax.pvary` when present, identity otherwise (pre-varying-types
+    jax has no device-variance type system to satisfy)."""
+    fn = getattr(jax.lax, "pvary", None)
+    if fn is None:
+        return x
+    return fn(x, axis_name)
+
+
+def get_abstract_mesh():
+    """`jax.sharding.get_abstract_mesh()` or None when unavailable."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    return fn()
+
+
+def keystr(path, separator: str = "/") -> str:
+    """`jax.tree_util.keystr(path, simple=True, separator=...)` with a
+    manual fallback for jax versions whose keystr takes no kwargs."""
+    try:
+        return jax.tree_util.keystr(path, simple=True, separator=separator)
+    except TypeError:
+        tu = jax.tree_util
+        parts = []
+        for k in path:
+            if isinstance(k, tu.SequenceKey):
+                parts.append(str(k.idx))
+            elif isinstance(k, tu.DictKey):
+                parts.append(str(k.key))
+            elif isinstance(k, tu.GetAttrKey):
+                parts.append(k.name)
+            elif isinstance(k, tu.FlattenedIndexKey):
+                parts.append(str(k.key))
+            else:
+                parts.append(str(k))
+        return separator.join(parts)

@@ -1,0 +1,636 @@
+"""Device-resident fused CEAZ chunk pipeline (the paper's Fig-4 engine).
+
+The staged reference path in ``core.ceaz`` orchestrates dual-quant ->
+histogram -> Huffman encode -> bit-pack from host numpy, with a device<->
+host round-trip between every stage and a Python loop over chunks. This
+module keeps the whole per-value pipeline on device, mirroring the FPGA's
+streaming structure (and cuSZ's fused GPU kernels):
+
+  pass 1  — one traced computation quantizes the WHOLE batch of chunks
+            (global-Lorenzo dual-quant) and computes the integer
+            reconstruction the literal check replays. Codes/deltas stay
+            in device memory; only per-chunk histogram summaries cross
+            to the host.
+  host    — the chi / codebook-update policy (AdaptiveCoder) and, in
+            fixed-ratio mode, the eb controller run per super-chunk on
+            the tiny histogram summaries — exactly the split the paper
+            uses (codeword generation is the slow serial path, §3.2).
+  pass 2  — one traced computation Huffman-encodes and bit-packs every
+            chunk against its per-chunk codebook. The packed payload +
+            per-block bit counts come back in a single transfer.
+
+Bit-exactness contract: given the same quantization backend, the fused
+path produces payloads (words, block_nbits, outliers, literals)
+BIT-IDENTICAL to ``core.ceaz.CEAZ`` with ``use_fused=False,
+backend='jax'`` — enforced by tests/test_fused.py. The device bitstream
+is packed in uint32 words (jax runs without 64-bit types by default);
+``_u32_to_u64`` folds pairs into the uint64 MSB-first wire layout of
+``core.huffman.encode``.
+
+Scope: float32 inputs, Lorenzo predictor, abs/rel/fixed_ratio modes. The
+facade falls back to the staged path for float64 and value-direct
+(predictor='none') compression, where the reference semantics are
+float64-host-side by design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import dualquant as core_dq
+from ..core.codebook import AdaptiveCoder
+from ..core.huffman import DEFAULT_MAX_LEN, NUM_SYMBOLS, Codebook
+
+# Device bitstreams are packed at the codebook's length limit; the wire
+# format (and the candidate window below) assumes codes never exceed 16
+# bits.
+MAX_CODE_BITS = DEFAULT_MAX_LEN
+_EPS32 = float(np.finfo(np.float32).eps)
+
+
+def chunk_layout(n: int, chunk_values: int) -> Tuple[int, int]:
+    """(n_chunks, n_last) for an n-value stream cut into chunk_values."""
+    n_chunks = max(1, -(-n // chunk_values))
+    n_last = n - (n_chunks - 1) * chunk_values
+    return n_chunks, n_last
+
+
+def words_capacity(chunk_values: int) -> int:
+    """Static uint32 words per chunk: worst case MAX_CODE_BITS/value,
+    rounded so the valid prefix always trims to whole uint64 words."""
+    max_w64 = (chunk_values * MAX_CODE_BITS + 63) // 64
+    return 2 * (max_w64 + 1)
+
+
+# On hosts where the jax "device" shares the CPU's memory, XLA scatters
+# (histogram, sparse compaction) serialize at ~10M values/s while a bulk
+# snapshot is a memcpy and numpy bincount/flatnonzero run at memory
+# bandwidth — so summaries are computed host-side from one snapshot per
+# array. On real accelerators the device-side scatter paths keep the data
+# resident. Overridable for testing via the stats_on_device arguments.
+def _default_stats_on_device() -> bool:
+    return jax.default_backend() != "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: batched dual-quant (+ the integer reconstruction for literals)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("ndim", "n_chunks", "chunk_values"))
+def _quantize_pass(work, eb, ndim, n_chunks, chunk_values):
+    """work (f32, rank=ndim) -> device-resident chunked state.
+
+    Returns (codes2, outl2, delta2, valid2, q) where the 2-D arrays are
+    (n_chunks, chunk_values) and q is the flat inverse-Lorenzo integer
+    field the literal check replays. Scatter-free by construction.
+    """
+    codes, outl, delta = core_dq.dual_quantize(work, eb, ndim)
+    n = codes.size
+    flat_codes = codes.reshape(-1).astype(jnp.int32)
+    flat_outl = outl.reshape(-1)
+    flat_delta = delta.reshape(-1)
+    pad = n_chunks * chunk_values - n
+    valid = jnp.arange(n_chunks * chunk_values, dtype=jnp.int32) < n
+    codes2 = jnp.pad(flat_codes, (0, pad)).reshape(n_chunks, chunk_values)
+    outl2 = jnp.pad(flat_outl, (0, pad)).reshape(n_chunks, chunk_values)
+    delta2 = jnp.pad(flat_delta, (0, pad)).reshape(n_chunks, chunk_values)
+    valid2 = valid.reshape(n_chunks, chunk_values)
+    q = core_dq.inverse_lorenzo(delta, ndim).reshape(-1)
+    return codes2, outl2, delta2, valid2, q
+
+
+@functools.partial(jax.jit, static_argnames=("k_literal",))
+def _device_stats(codes2, valid2, q, work_flat, eb, k_literal):
+    """Accelerator path: per-chunk histograms + literal candidates as
+    device scatters; only these summaries cross to the host.
+
+    The decompressor reconstructs through a float64 multiply; on device
+    we only have the float32 formula, so we collect a conservative
+    CANDIDATE set (few-ulp guard band) together with the exact integer q
+    at each candidate — the host replays the float64 formula on just
+    those to recover the staged path's exact literal set.
+    """
+    n_chunks = codes2.shape[0]
+    cidx = jnp.broadcast_to(jnp.arange(n_chunks, dtype=jnp.int32)[:, None],
+                            codes2.shape)
+    hists = jnp.zeros((n_chunks, NUM_SYMBOLS), jnp.int32) \
+        .at[cidx, codes2].add(valid2.astype(jnp.int32))
+    rec = q.astype(jnp.float32) * (2.0 * eb)
+    margin = 16.0 * _EPS32 * (jnp.abs(rec) + jnp.abs(work_flat)) + 1e-38
+    cand = jnp.abs(rec - work_flat) > (eb - margin)
+    lit_idx, lit_q, lit_count = _extract_sparse(cand, q, k_literal)
+    return hists, lit_idx, lit_q, lit_count
+
+
+def _extract_sparse(mask, values, k):
+    """Deterministic fixed-capacity compaction of a sparse mask.
+
+    -> (idx (k,) int32 ascending, vals (k,), count). Entries past the
+    first k survivors are dropped; callers compare count against k and
+    fall back to a dense host pass on overflow.
+    """
+    n = mask.shape[0]
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    tgt = jnp.where(mask, pos, k)                 # k => out of range, dropped
+    idx = jnp.zeros(k, jnp.int32).at[tgt].set(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    vals = jnp.zeros(k, values.dtype).at[tgt].set(values, mode="drop")
+    return idx, vals, mask.sum(dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: batched Huffman encode + bit-pack + outlier compaction
+# ---------------------------------------------------------------------------
+
+# A Huffman codeword is at most MAX_CODE_BITS=16 bits, so every real
+# symbol occupies >= 1 bit: at most 32 symbols START inside one 32-bit
+# output word, plus one that spills in from the left — 33 candidates in
+# the worst case. The host shrinks the window when the batch's codebooks
+# have a larger minimum code length (bucketed to bound recompiles).
+_CANDS = 33
+_CAND_BUCKETS = (9, 17, 33)          # min code length >= 4 / >= 2 / >= 1
+
+
+def _cand_window(min_len: int) -> int:
+    need = -(-32 // max(int(min_len), 1)) + 1
+    for b in _CAND_BUCKETS:
+        if need <= b:
+            return b
+    return _CANDS
+
+
+def _encode_one(codes, valid, lengths, cwords, block_size, w32, cands):
+    """One chunk: symbol codes -> packed u32 bitstream (host-layout).
+
+    Replicates core.huffman.encode bit-for-bit, but scatter-free: for
+    each OUTPUT word, searchsorted on the cumulative bit offsets finds
+    the first overlapping symbol and the 33-candidate window is gathered
+    and OR-composed. Gathers vectorize on every backend; the scatter
+    formulation serializes on CPU XLA.
+    """
+    cv = codes.shape[0]
+    lens = jnp.where(valid, lengths[codes], 0)
+    vals = jnp.where(valid, cwords[codes], 0).astype(jnp.uint32)
+    ends = jnp.cumsum(lens)
+    starts = (ends - lens).astype(jnp.int32)
+    total_bits = ends[-1]
+
+    w_bit = jnp.arange(w32, dtype=jnp.int32) * 32
+    first = jnp.searchsorted(ends, w_bit, side="right")   # covers bit w_bit
+    cand = first[:, None] + jnp.arange(cands, dtype=jnp.int32)[None, :]
+    in_range = cand < cv
+    ci = jnp.clip(cand, 0, cv - 1)
+    off = starts[ci] - w_bit[:, None]
+    ln = lens[ci]
+    v = vals[ci]
+    left = 32 - off - ln
+    live = in_range & (off < 32) & (off + ln > 0)
+    ls = jnp.clip(left, 0, 31).astype(jnp.uint32)
+    rs = jnp.clip(-left, 0, 31).astype(jnp.uint32)
+    shifted = jnp.where(left >= 0, v << ls, v >> rs)
+    # live contributions are bit-disjoint => sum == or
+    words = jnp.where(live, shifted, jnp.uint32(0)).sum(
+        axis=1, dtype=jnp.uint32)
+
+    nblocks = -(-cv // block_size)
+    lens_p = jnp.pad(lens, (0, nblocks * block_size - cv))
+    block_nbits = lens_p.reshape(nblocks, block_size).sum(axis=1)
+    return words, block_nbits, total_bits
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "w32", "cands"))
+def _encode_pack(codes2, valid2, lengths_tbl, cwords_tbl, block_size, w32,
+                 cands=_CANDS):
+    """Encode every chunk against its own codebook row, in one trace.
+
+    w32 is sized by the caller from the EXACT per-chunk payload bits
+    (hist . lengths, free on the host), bucketed — the gather work
+    tracks the real bit-rate instead of the 16-bit worst case.
+    """
+    return jax.vmap(
+        lambda c, v, ln, cw: _encode_one(c, v, ln, cw, block_size, w32,
+                                         cands))(
+        codes2, valid2, lengths_tbl, cwords_tbl)
+
+
+@functools.partial(jax.jit, static_argnames=("k_outlier",))
+def _extract_outliers(outl2, delta2, valid2, k_outlier):
+    """Accelerator path: per-chunk fixed-capacity outlier compaction."""
+    return jax.vmap(lambda m, d: _extract_sparse(m, d, k_outlier))(
+        outl2 & valid2, delta2)
+
+
+# ---------------------------------------------------------------------------
+# Host assembly
+# ---------------------------------------------------------------------------
+
+def _u32_to_u64(u32: np.ndarray) -> np.ndarray:
+    """Fold MSB-first u32 pairs into the u64 wire words of huffman.encode."""
+    return ((u32[0::2].astype(np.uint64) << np.uint64(32))
+            | u32[1::2].astype(np.uint64))
+
+
+@dataclasses.dataclass
+class _Pass1:
+    """State between the two fused passes.
+
+    The 2-D chunked arrays stay device-resident; which summaries exist
+    depends on the stats path (device scatters vs host snapshot).
+    """
+    codes2: jax.Array
+    outl2: jax.Array
+    delta2: jax.Array
+    valid2: jax.Array
+    q: jax.Array
+    hists: np.ndarray
+    n: int
+    n_chunks: int
+    chunk_values: int
+    stats_on_device: bool
+    # device-stats path: fixed-capacity literal candidates
+    lit_idx: Optional[jax.Array] = None
+    lit_q: Optional[jax.Array] = None
+    lit_count: Optional[jax.Array] = None
+    # host-stats path: bulk snapshots shared by hist/outlier/literal code
+    codes_host: Optional[np.ndarray] = None
+    outl_host: Optional[np.ndarray] = None
+    delta_host: Optional[np.ndarray] = None
+    q_host: Optional[np.ndarray] = None
+
+
+def _host_hists(codes_host: np.ndarray, n: int) -> np.ndarray:
+    """Per-chunk histograms in ONE bincount pass (runs at memory speed)."""
+    nc, cv = codes_host.shape
+    flat = codes_host.reshape(-1)[:n].astype(np.int64)
+    keys = flat + (np.arange(n, dtype=np.int64) // cv) * NUM_SYMBOLS
+    return np.bincount(keys, minlength=nc * NUM_SYMBOLS) \
+        .reshape(nc, NUM_SYMBOLS)
+
+
+def _run_pass1(work: jnp.ndarray, eb: float, ndim: int, chunk_values: int,
+               stats_on_device: Optional[bool] = None) -> _Pass1:
+    if stats_on_device is None:
+        stats_on_device = _default_stats_on_device()
+    n = int(work.size)
+    n_chunks, _ = chunk_layout(n, chunk_values)
+    codes2, outl2, delta2, valid2, q = _quantize_pass(
+        work, eb, ndim, n_chunks, chunk_values)
+    if stats_on_device:
+        k_lit = min(n, max(256, n // 256))
+        hists, lit_idx, lit_q, lit_count = _device_stats(
+            codes2, valid2, q, work.reshape(-1), eb, k_lit)
+        return _Pass1(codes2, outl2, delta2, valid2, q, np.asarray(hists),
+                      n, n_chunks, chunk_values, True,
+                      lit_idx=lit_idx, lit_q=lit_q, lit_count=lit_count)
+    codes_host = np.asarray(codes2)
+    return _Pass1(codes2, outl2, delta2, valid2, q,
+                  _host_hists(codes_host, n), n, n_chunks, chunk_values,
+                  False, codes_host=codes_host, q_host=np.asarray(q))
+
+
+def _literals(p1: _Pass1, x_flat: np.ndarray, eb: float, ndim: int,
+              work_shape) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact literal set (identical to the staged float64 check).
+
+    Host-stats path: direct dense check on the snapshot. Device-stats
+    path: replay the float64 formula on the device's candidate positions
+    only (dense fallback when candidates overflow capacity). Values are
+    gathered from the caller's ORIGINAL array."""
+    if not p1.stats_on_device:
+        q = p1.q_host.astype(np.int64)
+        rec = (q.astype(np.float64) * (2.0 * eb)).astype(np.float32)
+        idx = np.flatnonzero(
+            np.abs(rec.astype(np.float64) - x_flat.astype(np.float64)) > eb
+        ).astype(np.int64)
+        return idx, x_flat[idx].copy()
+    count = int(p1.lit_count)
+    if count <= p1.lit_idx.shape[0]:
+        idx = np.asarray(p1.lit_idx[:count]).astype(np.int64)
+        q = np.asarray(p1.lit_q[:count]).astype(np.int64)
+        rec = (q.astype(np.float64) * (2.0 * eb)).astype(np.float32)
+        viol = (np.abs(rec.astype(np.float64)
+                       - x_flat[idx].astype(np.float64)) > eb)
+        idx = idx[viol]
+    else:       # candidate capacity overflow: exact dense pass on the host
+        delta = np.asarray(p1.delta2).reshape(-1)[:p1.n]
+        rec = core_dq.np_dequantize(delta.reshape(work_shape), eb, ndim,
+                                    dtype=np.float32).reshape(-1)
+        idx = np.flatnonzero(
+            np.abs(rec.astype(np.float64) - x_flat.astype(np.float64)) > eb
+        ).astype(np.int64)
+    return idx, x_flat[idx].copy()
+
+
+def _chunk_len(p1: _Pass1, i: int) -> int:
+    return (p1.chunk_values if i < p1.n_chunks - 1
+            else p1.n - (p1.n_chunks - 1) * p1.chunk_values)
+
+
+def _outliers(p1: _Pass1) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Per-chunk (idx, delta) outlier escapes, path-appropriate."""
+    out = []
+    if p1.stats_on_device:
+        ext = _extract_outliers(p1.outl2, p1.delta2, p1.valid2,
+                                _k_outlier(p1.chunk_values))
+        oidx_np, odelta_np, ocount = (np.asarray(a) for a in ext)
+        k = oidx_np.shape[1]
+        for i in range(p1.n_chunks):
+            c = int(ocount[i])
+            if c <= k:
+                out.append((oidx_np[i, :c].astype(np.int64),
+                            odelta_np[i, :c].astype(np.int32)))
+            else:   # overflow: dense host fallback for this chunk
+                m = np.asarray(p1.outl2[i] & p1.valid2[i])
+                oi = np.flatnonzero(m).astype(np.int64)
+                out.append((oi, np.asarray(p1.delta2[i])[oi]
+                            .astype(np.int32)))
+        return out
+    if p1.outl_host is None:
+        p1.outl_host = np.asarray(p1.outl2)
+        p1.delta_host = np.asarray(p1.delta2)
+    for i in range(p1.n_chunks):
+        n_i = _chunk_len(p1, i)
+        oi = np.flatnonzero(p1.outl_host[i, :n_i]).astype(np.int64)
+        out.append((oi, p1.delta_host[i][oi].astype(np.int32)))
+    return out
+
+
+def _codebook_tables(decisions) -> Tuple[np.ndarray, np.ndarray]:
+    lengths = np.stack([d.codebook.lengths for d in decisions]) \
+        .astype(np.int32)
+    cwords = np.stack([d.codebook.codes for d in decisions]) \
+        .astype(np.uint32)
+    return lengths, cwords
+
+
+def _w32_bucket(totals: np.ndarray, chunk_values: int) -> int:
+    """Bucketed u32 capacity covering the exact payload bits: powers of
+    two up to a page, then page multiples (few jit variants, little
+    over-provisioning)."""
+    need = 2 * ((int(totals.max()) + 63) // 64 + 1)
+    cap = words_capacity(chunk_values)
+    if need <= 4096:
+        w32 = 4
+        while w32 < need:
+            w32 *= 2
+    else:
+        w32 = -(-need // 4096) * 4096
+    return min(w32, cap)
+
+
+def _k_outlier(chunk_values: int) -> int:
+    return min(chunk_values, max(1024, chunk_values // 8))
+
+
+def _encode_all(p1: _Pass1, decisions, block_size: int):
+    """Pass 2 for one array: batched encode+pack plus outlier escapes.
+
+    The exact per-chunk payload size is hist . lengths — free on the
+    host — so the traced pack is provisioned for the real bit-rate.
+    Returns (words_np, block_nbits_np, totals, outliers)."""
+    lengths_np, cwords_np = _codebook_tables(decisions)
+    totals = np.einsum("cs,cs->c", p1.hists.astype(np.int64),
+                       lengths_np.astype(np.int64))
+    w32 = _w32_bucket(totals, p1.chunk_values)
+    cands = _cand_window(lengths_np[lengths_np > 0].min())
+    words, block_nbits, _ = _encode_pack(
+        p1.codes2, p1.valid2, jnp.asarray(lengths_np),
+        jnp.asarray(cwords_np), block_size, w32, cands)
+    return (np.asarray(words), np.asarray(block_nbits), totals,
+            _outliers(p1))
+
+
+def _assemble_chunks(p1: _Pass1, words_np, nbits_np, totals, outliers,
+                     eb: float, decisions, block_size: int) -> List:
+    """Build host CompressedChunk records from the batched transfers."""
+    from ..core.ceaz import CompressedChunk
+    chunks = []
+    for i, decision in enumerate(decisions):
+        n_i = _chunk_len(p1, i)
+        nw64 = (int(totals[i]) + 63) // 64
+        words = _u32_to_u64(words_np[i, :2 * (nw64 + 1)])
+        nblocks = max(1, -(-n_i // block_size))
+        oi, od = outliers[i]
+        chunks.append(CompressedChunk(
+            words=words, block_nbits=nbits_np[i, :nblocks].astype(np.int64),
+            n_values=n_i, eb=eb,
+            action=decision.action, chi=decision.chi,
+            codebook_lengths=(decision.codebook.lengths.copy()
+                              if decision.stored_codebook else None),
+            codebook_id=decision.codebook.id,
+            outlier_idx=oi, outlier_delta=od))
+    return chunks
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
+                           coder: AdaptiveCoder, chunk_values: int,
+                           block_size: int, adaptive: bool = True,
+                           exact_build: bool = False,
+                           stats_on_device: Optional[bool] = None):
+    """Fused abs/rel compression of a float32 array (Lorenzo predictor).
+
+    Returns a CEAZCompressed bit-compatible with the staged jax-backend
+    reference. The array is quantized ONCE (native-rank Lorenzo); the
+    code stream is then cut into chunks for the adaptive coder.
+    """
+    from ..core.ceaz import CEAZCompressed
+    ndim = min(x.ndim, 3)
+    work_shape = x.shape if x.ndim <= 3 else (-1,) + x.shape[-2:]
+    work = jnp.asarray(x.reshape(work_shape), jnp.float32)
+    # capping at the stream length keeps chunk boundaries identical and
+    # avoids padding the whole pipeline up to a chunk nothing fills
+    chunk_values = max(1, min(chunk_values, int(x.size)))
+
+    p1 = _run_pass1(work, eb, ndim, chunk_values, stats_on_device)
+    decisions = _policy(p1.hists, coder, adaptive, exact_build)
+    enc = _encode_all(p1, decisions, block_size)
+    chunks = _assemble_chunks(p1, *enc, eb, decisions, block_size)
+    lit_idx, lit_val = _literals(p1, x.reshape(-1), eb, ndim, work.shape)
+    return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
+                          mode=mode, chunks=chunks,
+                          word_bits=x.dtype.itemsize * 8,
+                          literal_idx=lit_idx, literal_val=lit_val)
+
+
+def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
+                         chunk_values: int, block_size: int,
+                         adaptive: bool = True, exact_build: bool = False,
+                         stats_on_device: Optional[bool] = None):
+    """Fused fixed-ratio compression (1-D stream of chunks).
+
+    The eb feedback loop is inherently sequential across chunks (chunk
+    i's bound depends on chunk i-1's achieved bit-rate), so chunks run
+    one at a time — but each chunk is still two fused device calls
+    instead of a four-stage host round-trip.
+    """
+    from ..core.ceaz import CEAZCompressed
+    flat = x.reshape(-1)
+    n = len(flat)
+    chunks, lit_idx_parts, lit_val_parts = [], [], []
+    for s in range(0, n, chunk_values):
+        e = min(s + chunk_values, n)
+        eb = float(ctrl.eb)
+        seg = jnp.asarray(flat[s:e], jnp.float32)
+        p1 = _run_pass1(seg, eb, 1, e - s, stats_on_device)
+        decisions = _policy(p1.hists, coder, adaptive, exact_build)
+        enc = _encode_all(p1, decisions, block_size)
+        ch = _assemble_chunks(p1, *enc, eb, decisions, block_size)[0]
+        li, lv = _literals(p1, flat[s:e], eb, 1, (e - s,))
+        lit_idx_parts.append(li + s)
+        lit_val_parts.append(lv)
+        chunks.append(ch)
+        ctrl.feedback(ch.total_bits() / ch.n_values)
+    return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=1,
+                          mode="fixed_ratio", chunks=chunks,
+                          word_bits=x.dtype.itemsize * 8,
+                          literal_idx=np.concatenate(lit_idx_parts)
+                          .astype(np.int64),
+                          literal_val=np.concatenate(lit_val_parts))
+
+
+def _policy(hists: np.ndarray, coder: AdaptiveCoder, adaptive: bool,
+            exact_build: bool):
+    """Host chi policy over the per-chunk histogram summaries."""
+    from ..core.codebook import AdaptiveDecision
+    decisions = []
+    for freqs in hists.astype(np.int64):
+        if adaptive:
+            decisions.append(coder.step(freqs))
+        else:
+            cb = Codebook.from_freqs(freqs, exact=exact_build)
+            decisions.append(AdaptiveDecision("rebuild", 0.0, cb, True))
+    return decisions
+
+
+# ---------------------------------------------------------------------------
+# Shard-parallel batched compression (mesh-aware)
+# ---------------------------------------------------------------------------
+
+def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
+                   chunk_values: int, block_size: int,
+                   offline: Optional[Codebook] = None,
+                   plan=None, mode: str = "rel",
+                   stats_on_device: Optional[bool] = None,
+                   tau0: Optional[float] = None,
+                   tau1: Optional[float] = None,
+                   adaptive: bool = True, exact_build: bool = False):
+    """Compress many same-shape float32 shards through ONE pair of fused
+    device passes, optionally sharded over the mesh's batch axes.
+
+    Each shard keeps its own AdaptiveCoder stream (policy sequences match
+    per-shard staged compression); the per-value work for all shards runs
+    as a single stacked trace, which GSPMD splits across devices when
+    `plan` carries a mesh — the paper's N independent pipelines realized
+    over a device mesh instead of FPGA lanes.
+    """
+    from ..core.ceaz import CEAZCompressed
+    from ..core.codebook import default_offline_codebook
+    if stats_on_device is None:
+        stats_on_device = _default_stats_on_device()
+    if offline is None:
+        offline = default_offline_codebook()
+    if len({s.shape for s in shards}) != 1:
+        raise ValueError("batch_compress requires same-shape shards")
+    stack_np = np.stack([np.asarray(s, np.float32) for s in shards])
+    dp = 1
+    if plan is not None and getattr(plan, "mesh", None) is not None:
+        dp = int(np.prod([plan.axis_size(a) for a in plan.batch_axes]))
+    if dp > 1 and len(shards) % dp == 0:
+        stacked = jax.device_put(stack_np, plan.named(plan.batch))
+    else:
+        stacked = jnp.asarray(stack_np)
+    nshards = stacked.shape[0]
+    ndim = min(stacked.ndim - 1, 3)
+    ebs = []
+    for s in shards:
+        vrange = float(np.max(s) - np.min(s)) or 1.0
+        ebs.append(eb_rel * vrange if mode == "rel" else eb_rel)
+
+    # pass 1 vmapped over the shard axis (per-shard eb)
+    n = int(stacked[0].size)
+    chunk_values = max(1, min(chunk_values, n))
+    n_chunks, _ = chunk_layout(n, chunk_values)
+    work = stacked.reshape((nshards,) + _work_shape(stacked.shape[1:]))
+    ebs_j = jnp.asarray(ebs, jnp.float32)
+    qp = jax.vmap(lambda w, e: _quantize_pass(w, e, ndim, n_chunks,
+                                              chunk_values))(work, ebs_j)
+    codes3, outl3, delta3, valid3, q2 = qp
+
+    p1s: List[_Pass1] = []
+    if stats_on_device:
+        k_lit = min(n, max(256, n // 256))
+        st = jax.vmap(lambda c, v, q, w, e: _device_stats(
+            c, v, q, w.reshape(-1), e, k_lit))(
+            codes3, valid3, q2, work, ebs_j)
+        hists = np.asarray(st[0])
+        for si in range(nshards):
+            p1s.append(_Pass1(codes3[si], outl3[si], delta3[si],
+                              valid3[si], q2[si], hists[si], n, n_chunks,
+                              chunk_values, True, lit_idx=st[1][si],
+                              lit_q=st[2][si], lit_count=st[3][si]))
+    else:
+        codes_host = np.asarray(codes3)
+        outl_host = np.asarray(outl3)
+        delta_host = np.asarray(delta3)
+        q_host = np.asarray(q2)
+        for si in range(nshards):
+            p1s.append(_Pass1(codes3[si], outl3[si], delta3[si],
+                              valid3[si], q2[si],
+                              _host_hists(codes_host[si], n), n, n_chunks,
+                              chunk_values, False,
+                              codes_host=codes_host[si],
+                              outl_host=outl_host[si],
+                              delta_host=delta_host[si],
+                              q_host=q_host[si]))
+
+    # host policy per shard, then ONE batched pass-2 over shards*chunks
+    from ..core.codebook import DEFAULT_TAU0, DEFAULT_TAU1
+    all_dec = []
+    for si in range(nshards):
+        coder = AdaptiveCoder(
+            offline, DEFAULT_TAU0 if tau0 is None else tau0,
+            DEFAULT_TAU1 if tau1 is None else tau1, exact_build)
+        all_dec.append(_policy(p1s[si].hists, coder, adaptive=adaptive,
+                               exact_build=exact_build))
+    tbls = [_codebook_tables(d) for d in all_dec]
+    lengths_np = np.concatenate([t[0] for t in tbls])
+    cwords_np = np.concatenate([t[1] for t in tbls])
+    hists_all = np.concatenate([p.hists for p in p1s]).astype(np.int64)
+    totals = np.einsum("cs,cs->c", hists_all, lengths_np.astype(np.int64))
+    w32 = _w32_bucket(totals, chunk_values)
+    cands = _cand_window(lengths_np[lengths_np > 0].min())
+    flat2 = lambda a: a.reshape((nshards * n_chunks,) + a.shape[2:])
+    words, block_nbits, _ = _encode_pack(
+        flat2(codes3), flat2(valid3), jnp.asarray(lengths_np),
+        jnp.asarray(cwords_np), block_size, w32, cands)
+    words_np = np.asarray(words)
+    nbits_np = np.asarray(block_nbits)
+
+    outs = []
+    for si, s in enumerate(shards):
+        sl = slice(si * n_chunks, (si + 1) * n_chunks)
+        chunks = _assemble_chunks(p1s[si], words_np[sl], nbits_np[sl],
+                                  totals[sl], _outliers(p1s[si]), ebs[si],
+                                  all_dec[si], block_size)
+        x_flat = np.asarray(s, np.float32).reshape(-1)
+        lit_idx, lit_val = _literals(p1s[si], x_flat, ebs[si], ndim,
+                                     _work_shape(stacked.shape[1:]))
+        outs.append(CEAZCompressed(
+            shape=s.shape, dtype="float32", ndim=ndim, mode=mode,
+            chunks=chunks, word_bits=32,
+            literal_idx=lit_idx, literal_val=lit_val))
+    return outs
+
+
+def _work_shape(shape) -> tuple:
+    return tuple(shape) if len(shape) <= 3 else (-1,) + tuple(shape[-2:])

@@ -20,6 +20,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import compat
+
 
 @dataclasses.dataclass
 class ShardingPlan:
@@ -91,6 +93,42 @@ class ShardingPlan:
     def logits_btv(self, x):
         """(batch, seq, vocab): vocab over model axis."""
         return self.cs(x, self.batch, None, self.model_axis)
+
+
+def shard_compress(x: np.ndarray, plan: ShardingPlan,
+                   eb_rel: float = 1e-4, chunk_values: int = 1 << 20,
+                   block_size: int = 4096):
+    """Shard-parallel fused compression of one large array.
+
+    Cuts `x` along its leading axis into one shard per device of the
+    plan's batch axes (falling back to a single shard without a mesh)
+    and compresses them all through one pair of fused device passes —
+    each shard is an independent CEAZ stream, so ranks can decode in
+    parallel. Returns (compressed_list, shard_len) where shard_len is
+    the leading-axis extent of every shard but possibly the last.
+
+    Mesh parallelism needs the shard count to divide the batch axes'
+    device count; a ragged tail degrades that batch (and the tail) to
+    unsharded fused passes — correct, just not device-parallel.
+    """
+    from . import fused
+    if x.shape[0] == 0:
+        raise ValueError("shard_compress needs a non-empty leading axis")
+    n_dev = int(np.prod([plan.axis_size(a) for a in plan.batch_axes])) \
+        if plan.mesh is not None else 1
+    n_dev = max(1, min(n_dev, x.shape[0]))
+    per = -(-x.shape[0] // n_dev)
+    shards = [x[s:s + per] for s in range(0, x.shape[0], per)]
+    if len({s.shape for s in shards}) > 1:      # ragged tail: pad-free split
+        head, tail = shards[:-1], shards[-1:]
+        comps = (fused.batch_compress(head, eb_rel, chunk_values,
+                                      block_size, plan=plan)
+                 + fused.batch_compress(tail, eb_rel, chunk_values,
+                                        block_size, plan=None))
+    else:
+        comps = fused.batch_compress(shards, eb_rel, chunk_values,
+                                     block_size, plan=plan)
+    return comps, per
 
 
 def make_plan(mesh: Optional[Mesh]) -> ShardingPlan:
@@ -185,7 +223,7 @@ def param_shardings(params, plan: ShardingPlan):
         return jax.tree.map(lambda _: None, params)
 
     def to_sharding(path, leaf):
-        keys = jax.tree_util.keystr(path, simple=True, separator="/")
+        keys = compat.keystr(path)
         shape = getattr(leaf, "shape", ())
         ndim = len(shape) if hasattr(leaf, "shape") else np.ndim(leaf)
         spec = spec_for_path(keys, ndim, plan.attn_part)

@@ -1,8 +1,11 @@
 """Dual-quantization invariants: error bound, exactness, outlier escapes."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="install the 'test' extra for property tests")
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import dualquant as dq

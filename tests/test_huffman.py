@@ -1,7 +1,10 @@
 """Canonical Huffman: roundtrip, Kraft validity, truncation, approx sort."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="install the 'test' extra for property tests")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import huffman as H

@@ -1,7 +1,11 @@
 """Rate-control theory: B' = B - log2(N) law, one-shot calibration,
 closed-loop controller convergence, min-update-size rule."""
-import hypothesis.strategies as st
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="install the 'test' extra for property tests")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (FixedRatioController, bitrate_from_ratio,

@@ -19,6 +19,7 @@ from repro.runtime.sharding import ShardingPlan
 PLAN = ShardingPlan(mesh=None)
 
 
+@pytest.mark.slow
 def test_training_decreases_loss():
     cfg = get_arch("gemma3-1b").reduced()
     dc = DataConfig(vocab_size=cfg.vocab_size, global_batch=8, seq_len=64)
