@@ -26,13 +26,15 @@ print("== compressed save (CEAZ auto-predictor, rel eb=5e-4) ==")
 path = C.save_checkpoint(DIR, state, step=100)
 import json
 man = json.load(open(os.path.join(path, "manifest.json")))
-raw = sum(m["nbytes_raw"] for m in man["leaves"].values())
-stored = sum(m["nbytes_stored"] for m in man["leaves"].values())
+raw = sum(m["raw_nbytes"] for m in man["leaves"].values())
+stored = sum(m["nbytes"] for m in man["leaves"].values())
 print(f"  raw={raw/1e6:.1f}MB stored={stored/1e6:.1f}MB "
-      f"ratio={raw/stored:.2f}x")
+      f"ratio={raw/stored:.2f}x  (one {man['file']} stream, "
+      f"leaf compression overlapped with the ordered commit)")
 ceaz_leaves = [k for k, m in man["leaves"].items() if m["codec"] == "ceaz"]
+m0 = man["leaves"][ceaz_leaves[0]]
 print(f"  {len(ceaz_leaves)} leaves CEAZ-compressed, e.g. "
-      f"{ceaz_leaves[0]} @ {man['leaves'][ceaz_leaves[0]]['ratio']}x")
+      f"{ceaz_leaves[0]} @ {m0['raw_nbytes'] / m0['nbytes']:.1f}x")
 
 print("== restore + verify ==")
 restored, meta = C.restore_checkpoint(DIR)
@@ -45,11 +47,13 @@ print(f"  step={meta['step']}  max param err={rng_err:.2e} "
 print("== corruption tolerance: truncate a payload of step 100, "
       "save step 200, corrupt IT, restore falls back ==")
 C.save_checkpoint(DIR, state, step=200)
-victim = os.path.join(DIR, "step_00000200", "leaf_00003.bin")
-with open(victim, "wb") as f:
+victim = os.path.join(DIR, "step_00000200", C.LEAVES_STREAM)
+with open(victim, "r+b") as f:
+    f.seek(os.path.getsize(victim) // 3)
     f.write(b"garbage")
 restored2, meta2 = C.restore_checkpoint(DIR)
-print(f"  restore landed on step={meta2['step']} (hash check rejected 200)")
+print(f"  restore landed on step={meta2['step']} "
+      "(stream checksum rejected 200)")
 
 print("== lossless mode round-trip ==")
 C.save_checkpoint(DIR + "_raw", state, step=1,

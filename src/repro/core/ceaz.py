@@ -198,6 +198,9 @@ class CEAZ:
         if x.dtype not in (np.float32, np.float64):
             raise TypeError(f"CEAZ compresses float data, got {x.dtype}")
         word_bits = x.dtype.itemsize * 8
+        # fused covers float32 Lorenzo only; float64 and value-direct
+        # inputs fall back to the host-staged reference HERE — callers
+        # never need their own eligibility split
         fused_ok = self.cfg.use_fused and x.dtype == np.float32
         if self.cfg.mode in ("abs", "rel"):
             pred = self._pick_predictor(x, self._abs_eb(x))
@@ -210,6 +213,34 @@ class CEAZ:
             return self._compress_fixed_ratio(x, word_bits,
                                               use_fused=fused_ok)
         raise ValueError(self.cfg.mode)
+
+    def _batch_fused_ok(self, shards) -> bool:
+        """One batched fused device pass expresses: error-bounded mode,
+        Lorenzo predictor, homogeneous float32 shards."""
+        return (self.cfg.use_fused and self.cfg.mode in ("abs", "rel")
+                and self.cfg.predictor == "lorenzo"
+                and len(shards) > 0
+                and len({s.shape for s in shards}) == 1
+                and all(s.dtype == np.float32 for s in shards))
+
+    def compress_batch(self, shards, plan=None) -> List[CEAZCompressed]:
+        """Compress a sequence of shards under this facade's policy.
+
+        Homogeneous float32 Lorenzo shards run as ONE batched fused
+        device pass (mesh-sharded when `plan` carries a mesh); anything
+        else — float64, predictor='none'/'auto', ragged shapes,
+        use_fused off — transparently takes per-shard `compress`, which
+        itself routes ineligible inputs to the host-staged path.
+        """
+        shards = [np.asarray(s) for s in shards]
+        if not self._batch_fused_ok(shards):
+            return [self.compress(s) for s in shards]   # staged fallback
+        from ..runtime import fused
+        return fused.batch_compress(
+            shards, self.cfg.eb, self._chunk_values(32),
+            self.cfg.block_size, offline=self.offline, plan=plan,
+            mode=self.cfg.mode, tau0=self.cfg.tau0, tau1=self.cfg.tau1,
+            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build)
 
     def _coder(self) -> AdaptiveCoder:
         return AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,

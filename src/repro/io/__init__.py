@@ -1,1 +1,1 @@
-from . import collectives, filewrite  # noqa: F401
+from . import collectives, engine, filewrite  # noqa: F401

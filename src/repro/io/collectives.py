@@ -95,19 +95,56 @@ def ceaz_gather(shards, eb_rel: float = 1e-4, plan=None,
     Returns (compressed_list, stats) where stats reports raw vs wire
     bytes — the paper's Fig 17 quantity.
     """
-    from ..runtime import fused
-    shards = list(shards)
-    if len({np.asarray(s).shape for s in shards}) == 1:
-        comps = fused.batch_compress(shards, eb_rel, chunk_values,
-                                     block_size, plan=plan)
-    else:
-        comps = [c for s in shards
-                 for c in fused.batch_compress(
-                     [np.asarray(s)], eb_rel, chunk_values, block_size)]
-    raw = sum(int(np.asarray(s).nbytes) for s in shards)
+    from ..core import CEAZ, CEAZConfig
+    shards = [np.asarray(s) for s in shards]
+    comp = CEAZ(CEAZConfig(mode="rel", eb=eb_rel, use_fused=True,
+                           chunk_bytes=4 * chunk_values,
+                           block_size=block_size))
+    # facade routes: homogeneous f32 -> one batched fused pass; ragged/
+    # float64 -> transparent per-shard staged fallback
+    comps = comp.compress_batch(shards, plan=plan)
+    raw = sum(int(s.nbytes) for s in shards)
     wire = sum(c.nbytes() for c in comps)
     return comps, dict(raw_bytes=raw, wire_bytes=wire,
                        ratio=raw / max(wire, 1), n_ranks=len(comps))
+
+
+def ceaz_gather_stream(shards, path: str, eb_rel: float = 1e-4,
+                       plan=None, chunk_values: int = 1 << 20,
+                       block_size: int = 4096, group: int = 2,
+                       overlap: bool = True):
+    """Streaming gather: rank shards land in one indexed stream file.
+
+    The aggregator's view of MPI_Gather + write: as each group of rank
+    shards finishes its fused device compression, its payloads are
+    already committing to the aggregated stream while the next group
+    compresses (two-phase aggregation with the phases overlapped).
+    `shards` may also contain callables — a rank "arriving" is its
+    fetcher being called, so slow ranks overlap the commits of earlier
+    ones. Returns gather stats incl. wire bytes (the Fig 17 quantity).
+    """
+    from ..core import CEAZ, CEAZConfig
+    from . import engine as E
+    comp = CEAZ(CEAZConfig(mode="rel", eb=eb_rel, use_fused=True,
+                           chunk_bytes=4 * chunk_values,
+                           block_size=block_size))
+    eng = E.AsyncCompressWriteEngine(
+        path, E.ceaz_compress_fn(comp, plan),
+        sync=not overlap, meta={"kind": "gather", "eb_rel": eb_rel})
+    with eng:
+        shards = list(shards)
+        for s in range(0, len(shards), max(1, group)):
+            grp = [np.asarray(sh() if callable(sh) else sh)
+                   for sh in shards[s:s + max(1, group)]]
+            eng.submit_batch(
+                [f"rank_{s + j:04d}" for j in range(len(grp))], grp,
+                [{"shape": list(a.shape), "dtype": str(a.dtype),
+                  "raw_nbytes": int(a.nbytes)} for a in grp])
+    d = eng.stats.as_dict()
+    return dict(raw_bytes=d["raw_bytes"], wire_bytes=d["stored_bytes"],
+                ratio=d["raw_bytes"] / max(d["stored_bytes"], 1),
+                n_ranks=d["n_records"], wall_s=d["wall_s"],
+                overlap_efficiency=d["overlap_efficiency"], path=path)
 
 
 @dataclasses.dataclass

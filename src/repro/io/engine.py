@@ -1,0 +1,630 @@
+"""Asynchronous compression-I/O engine + self-describing stream format.
+
+The paper's headline result (up to 28.9x MPI_File_write) comes from
+hiding compression cost behind the write path; PR-1 made compression
+fast on device but every consumer still ran compress -> write
+*serially*. This module is the overlap layer every write consumer
+(filewrite, checkpoint, grad snapshots, streaming gather) plugs into:
+
+  submit thread  --> [compress stage] --> [serialize pool] --> [committer]
+   (bounded q)      one thread: device      CPU workers:        one thread:
+                    fused pipeline on       pickle + crc32      ORDERED append
+                    shard/group i+1         in parallel         of shard i
+
+While the committer is appending shard *i* to storage, the compress
+stage is already dispatching the device passes for shard *i+1* — the
+classic double-buffer. Bounded queues between the stages give
+backpressure: compression can run at most ``max_inflight`` items ahead
+of the slowest stage, so device/host memory stays flat no matter how
+slow the storage is.
+
+Ordered commit: payloads always land in submit order (the serialize
+pool parallelizes byte production, not file placement), so the async
+engine produces files BYTE-IDENTICAL to the synchronous reference
+(``sync=True`` runs the same stages inline) — enforced by
+tests/test_engine.py.
+
+Stream format (``.ceazs`` v1, little-endian):
+
+    +--------------------------------------------------------------+
+    | 8B  stream magic  "CEAZS\\x01\\x00\\x00"                       |
+    +--------------------------------------------------------------+
+    | record 0:  16B header ["SHRD" | u32 seq | u64 payload_len]   |
+    |            payload bytes (pickled CEAZCompressed / npy / raw)|
+    | record 1:  ...                                  (seq order)  |
+    +--------------------------------------------------------------+
+    | footer: JSON {format, meta, records:[{seq,key,offset,nbytes, |
+    |         crc32, codec, shape, dtype, eb, mode, ...}]}         |
+    +--------------------------------------------------------------+
+    | 28B trailer [u64 footer_off | u64 footer_len |               |
+    |              u32 footer_crc32 | 8B end magic "CEAZSEND"]     |
+    +--------------------------------------------------------------+
+
+The read side is paranoid by design — every failure mode the crash-
+safety tests exercise raises ``StreamCorruptionError`` instead of
+returning garbage:
+
+  * truncated file        -> end-magic / bounds check fails
+  * corrupted footer      -> footer crc32 mismatch
+  * corrupted payload     -> per-record crc32 mismatch
+  * out-of-order commit   -> record header seq != index position
+                             (each payload block self-identifies, so a
+                             committer bug that swapped two shards is
+                             caught even when the index looks sane)
+"""
+from __future__ import annotations
+
+import concurrent.futures as futures
+import dataclasses
+import io as _io
+import json
+import os
+import pickle
+import queue
+import struct
+import tempfile
+import threading
+import time
+import zlib
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+STREAM_MAGIC = b"CEAZS\x01\x00\x00"
+END_MAGIC = b"CEAZSEND"
+RECORD_MAGIC = b"SHRD"
+RECORD_HEADER = struct.Struct("<4sIQ")        # magic, seq, payload bytes
+TRAILER = struct.Struct("<QQI8s")             # foot off, foot len, crc, magic
+STREAM_FORMAT_VERSION = 1
+
+
+class StreamCorruptionError(IOError):
+    """The stream failed a structural or checksum validation."""
+
+
+# ---------------------------------------------------------------------------
+# Payload codecs (shared by the write and read sides)
+# ---------------------------------------------------------------------------
+
+def serialize_payload(obj) -> tuple:
+    """Default object -> (payload bytes, codec meta).
+
+    CEAZCompressed pickles (deterministically: numpy arrays pickle
+    bit-stably), ndarrays go through npy, raw bytes pass through.
+    """
+    from ..core.ceaz import CEAZCompressed
+    if isinstance(obj, CEAZCompressed):
+        return pickle.dumps(obj, protocol=4), {"codec": "ceaz"}
+    if isinstance(obj, np.ndarray):
+        if obj.dtype.name not in np.sctypeDict:   # ml_dtypes (bf16, fp8)
+            return obj.tobytes(), {"codec": "bytes",
+                                   "shape": list(obj.shape),
+                                   "dtype": str(obj.dtype)}
+        bio = _io.BytesIO()
+        np.save(bio, obj, allow_pickle=False)
+        return bio.getvalue(), {"codec": "npy"}
+    if isinstance(obj, (bytes, bytearray)):
+        return bytes(obj), {"codec": "raw"}
+    raise TypeError(f"no stream codec for {type(obj)!r}")
+
+
+def deserialize_payload(payload: bytes, meta: Dict):
+    """Inverse of serialize_payload (returns the stored OBJECT; ceaz
+    records come back as CEAZCompressed — decompression is the caller's
+    business so readers can stay lazy)."""
+    codec = meta.get("codec", "raw")
+    if codec == "ceaz":
+        return pickle.loads(payload)
+    if codec == "npy":
+        arr = np.load(_io.BytesIO(payload), allow_pickle=False)
+        if arr.dtype.kind == "V" and "dtype" in meta:
+            arr = arr.view(_np_dtype(meta["dtype"]))
+        return arr
+    if codec == "bytes":
+        return np.frombuffer(payload, dtype=_np_dtype(meta["dtype"])) \
+            .reshape(meta["shape"]).copy()
+    return payload
+
+
+def _np_dtype(name: str):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+# ---------------------------------------------------------------------------
+# Write side: ordered stream writer (the single-appender "phase 2")
+# ---------------------------------------------------------------------------
+
+class StreamWriter:
+    """Ordered appender for one ``.ceazs`` stream.
+
+    Writes to ``<path>.tmp`` and atomically renames on close, so a
+    crash mid-stream never leaves a half-file under the final name.
+    ``emulate_bps`` throttles the append to a storage bandwidth (stored
+    bytes/s) — used by the overlap benchmark to model the paper's
+    parallel-file-system ceiling identically for sync and async runs.
+    """
+
+    def __init__(self, path: str, meta: Optional[Dict] = None,
+                 emulate_bps: Optional[float] = None,
+                 fsync: bool = True):
+        self.path = path
+        self._meta = dict(meta or {})
+        self._records: List[Dict] = []
+        self._seq = 0
+        self._emulate_bps = emulate_bps
+        self._fsync = fsync
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        # unique temp name: concurrent writers to the same target never
+        # interleave; last finalized os.replace wins atomically
+        fd, self._tmp = tempfile.mkstemp(
+            dir=d, prefix="." + os.path.basename(path) + ".tmp_")
+        self._f = os.fdopen(fd, "wb")
+        self._f.write(STREAM_MAGIC)
+        self._off = len(STREAM_MAGIC)
+        self.write_s = 0.0
+
+    def append(self, key: str, payload: bytes,
+               meta: Optional[Dict] = None) -> Dict:
+        """Commit one payload as the next record; returns its index row."""
+        t0 = time.perf_counter()
+        seq = self._seq
+        header = RECORD_HEADER.pack(RECORD_MAGIC, seq, len(payload))
+        self._f.write(header)
+        self._f.write(payload)
+        rec = {"seq": seq, "key": key, "offset": self._off,
+               "nbytes": len(payload),
+               "crc32": zlib.crc32(payload) & 0xFFFFFFFF}
+        if meta:
+            rec.update({k: v for k, v in meta.items() if k not in rec})
+        self._records.append(rec)
+        self._off += len(header) + len(payload)
+        self._seq += 1
+        el = time.perf_counter() - t0
+        if self._emulate_bps:
+            budget = (len(header) + len(payload)) / self._emulate_bps
+            if budget > el:
+                time.sleep(budget - el)
+                el = budget
+        self.write_s += el
+        return rec
+
+    def close(self, extra_meta: Optional[Dict] = None) -> List[Dict]:
+        """Write footer + trailer, fsync, atomic-rename to final path."""
+        meta = dict(self._meta)
+        if extra_meta:
+            meta.update(extra_meta)
+        footer = json.dumps(
+            {"format": STREAM_FORMAT_VERSION, "meta": meta,
+             "records": self._records},
+            sort_keys=True, separators=(",", ":")).encode()
+        self._f.write(footer)
+        self._f.write(TRAILER.pack(self._off, len(footer),
+                                   zlib.crc32(footer) & 0xFFFFFFFF,
+                                   END_MAGIC))
+        self._f.flush()
+        if self._fsync:
+            os.fsync(self._f.fileno())
+        self._f.close()
+        os.replace(self._tmp, self.path)
+        return self._records
+
+    def abort(self):
+        try:
+            self._f.close()
+        finally:
+            if os.path.exists(self._tmp):
+                os.unlink(self._tmp)
+
+
+# ---------------------------------------------------------------------------
+# Read side: validating reader
+# ---------------------------------------------------------------------------
+
+class StreamReader:
+    """Validating reader for a ``.ceazs`` stream.
+
+    The constructor validates the trailer, footer checksum and the
+    structural invariants of the index (monotonic in-bounds offsets,
+    dense seq numbering); ``payload(i)`` additionally checks the
+    record's self-identifying header and crc32 before returning bytes.
+    Every violation raises StreamCorruptionError — no silent garbage.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        try:
+            size = os.path.getsize(path)
+        except OSError as e:
+            raise StreamCorruptionError(f"{path}: unreadable ({e})")
+        if size < len(STREAM_MAGIC) + TRAILER.size:
+            raise StreamCorruptionError(
+                f"{path}: {size}B is smaller than an empty stream "
+                "(truncated)")
+        self._f = open(path, "rb")
+        try:
+            self._validate(size)
+        except BaseException:       # don't leak the handle on bad streams
+            self._f.close()
+            raise
+
+    def _validate(self, size: int):
+        path = self.path
+        if self._f.read(len(STREAM_MAGIC)) != STREAM_MAGIC:
+            raise StreamCorruptionError(f"{path}: bad stream magic")
+        self._f.seek(size - TRAILER.size)
+        foot_off, foot_len, foot_crc, magic = TRAILER.unpack(
+            self._f.read(TRAILER.size))
+        if magic != END_MAGIC:
+            raise StreamCorruptionError(
+                f"{path}: end magic missing (truncated or not finalized)")
+        if (foot_off < len(STREAM_MAGIC)
+                or foot_off + foot_len + TRAILER.size != size):
+            raise StreamCorruptionError(
+                f"{path}: footer bounds inconsistent with file size")
+        self._f.seek(foot_off)
+        footer = self._f.read(foot_len)
+        if (zlib.crc32(footer) & 0xFFFFFFFF) != foot_crc:
+            raise StreamCorruptionError(f"{path}: footer checksum mismatch")
+        try:
+            doc = json.loads(footer)
+        except ValueError as e:
+            raise StreamCorruptionError(f"{path}: footer unparsable ({e})")
+        if doc.get("format") != STREAM_FORMAT_VERSION:
+            raise StreamCorruptionError(
+                f"{path}: unsupported stream format {doc.get('format')!r}")
+        self.meta: Dict = doc.get("meta", {})
+        self.records: List[Dict] = doc.get("records", [])
+        prev_end = len(STREAM_MAGIC)
+        for i, rec in enumerate(self.records):
+            if rec.get("seq") != i:
+                raise StreamCorruptionError(
+                    f"{path}: index seq {rec.get('seq')} at position {i} "
+                    "(out-of-order commit)")
+            off, nb = rec.get("offset", -1), rec.get("nbytes", -1)
+            if off != prev_end or nb < 0 \
+                    or off + RECORD_HEADER.size + nb > foot_off:
+                raise StreamCorruptionError(
+                    f"{path}: record {i} offsets out of bounds/non-contiguous")
+            prev_end = off + RECORD_HEADER.size + nb
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def payload(self, i: int) -> bytes:
+        """Record i's payload bytes, header- and checksum-verified."""
+        rec = self.records[i]
+        self._f.seek(rec["offset"])
+        magic, seq, nbytes = RECORD_HEADER.unpack(
+            self._f.read(RECORD_HEADER.size))
+        if magic != RECORD_MAGIC:
+            raise StreamCorruptionError(
+                f"{self.path}: record {i} header magic corrupted")
+        if seq != rec["seq"] or nbytes != rec["nbytes"]:
+            raise StreamCorruptionError(
+                f"{self.path}: record {i} header says seq={seq}/"
+                f"{nbytes}B, index says seq={rec['seq']}/{rec['nbytes']}B "
+                "(out-of-order or torn commit)")
+        payload = self._f.read(nbytes)
+        if len(payload) != nbytes:
+            raise StreamCorruptionError(
+                f"{self.path}: record {i} truncated")
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != rec["crc32"]:
+            raise StreamCorruptionError(
+                f"{self.path}: record {i} payload checksum mismatch")
+        return payload
+
+    def read_object(self, i: int):
+        return deserialize_payload(self.payload(i), self.records[i])
+
+    def iter_objects(self) -> Iterator[tuple]:
+        for i, rec in enumerate(self.records):
+            yield rec, self.read_object(i)
+
+    def close(self):
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_stream_arrays(path: str, comp=None) -> List[np.ndarray]:
+    """Decode every record of a stream back to arrays (ceaz records are
+    decompressed with `comp` — default facade config if omitted)."""
+    from ..core import CEAZ
+    comp = comp or CEAZ()
+    out = []
+    with StreamReader(path) as r:
+        for rec, obj in r.iter_objects():
+            from ..core.ceaz import CEAZCompressed
+            if isinstance(obj, CEAZCompressed):
+                obj = comp.decompress(obj)
+            out.append(obj)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The async engine
+# ---------------------------------------------------------------------------
+
+_SENTINEL = object()
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Per-run accounting; `overlap_efficiency` is how much of the
+    compress+write cost the pipeline hid (1.0 = perfect overlap)."""
+    n_records: int = 0
+    raw_bytes: int = 0
+    stored_bytes: int = 0
+    wall_s: float = 0.0
+    compress_s: float = 0.0
+    serialize_s: float = 0.0
+    write_s: float = 0.0
+    records: List[Dict] = dataclasses.field(default_factory=list)
+
+    def ratio(self) -> float:
+        return self.raw_bytes / max(self.stored_bytes, 1)
+
+    def overlap_efficiency(self) -> float:
+        serial = self.compress_s + self.write_s
+        if serial <= 0 or self.wall_s <= 0:
+            return 0.0
+        busy = max(self.compress_s, self.write_s)
+        if serial == busy:
+            return 1.0
+        return max(0.0, min(1.0, (serial - self.wall_s)
+                            / (serial - busy)))
+
+    def as_dict(self) -> Dict:
+        return {"n_records": self.n_records, "raw_bytes": self.raw_bytes,
+                "stored_bytes": self.stored_bytes, "ratio": self.ratio(),
+                "wall_s": self.wall_s, "compress_s": self.compress_s,
+                "serialize_s": self.serialize_s, "write_s": self.write_s,
+                "overlap_efficiency": self.overlap_efficiency(),
+                "records": self.records}
+
+
+class AsyncCompressWriteEngine:
+    """Double-buffered compress -> serialize -> ordered-commit pipeline.
+
+    ``compress_fn(keys, items) -> list[obj]`` runs on a dedicated
+    thread (one batch at a time — device passes and AdaptiveCoder
+    streams are order-dependent); ``serialize_fn(obj) -> (bytes, meta)``
+    fans out on a worker pool; a committer thread appends payloads
+    strictly in submit order. ``sync=True`` runs the exact same stages
+    inline — the byte-identical reference the tests compare against.
+
+    Backpressure: both inter-stage queues are bounded by
+    ``max_inflight`` batches, so a slow storage target stalls
+    compression instead of accumulating payloads in memory.
+    """
+
+    def __init__(self, path: str,
+                 compress_fn: Callable[[List[str], List[Any]], List[Any]],
+                 serialize_fn: Callable[[Any], tuple] = serialize_payload,
+                 *, writers: int = 2, max_inflight: int = 2,
+                 meta: Optional[Dict] = None, sync: bool = False,
+                 emulate_bps: Optional[float] = None, fsync: bool = True):
+        self._compress_fn = compress_fn
+        self._serialize_fn = serialize_fn
+        self._writer = StreamWriter(path, meta=meta,
+                                    emulate_bps=emulate_bps, fsync=fsync)
+        self._sync = sync
+        self.stats = EngineStats()
+        self._t0 = time.perf_counter()
+        self._error: Optional[BaseException] = None
+        self._closed = False
+        if not sync:
+            self._pool = futures.ThreadPoolExecutor(
+                max_workers=max(1, writers),
+                thread_name_prefix="ceazs-serialize")
+            self._cq: queue.Queue = queue.Queue(maxsize=max(1, max_inflight))
+            self._wq: queue.Queue = queue.Queue(maxsize=max(1, max_inflight))
+            self._compressor = threading.Thread(
+                target=self._compress_loop, name="ceazs-compress",
+                daemon=True)
+            self._committer = threading.Thread(
+                target=self._commit_loop, name="ceazs-commit", daemon=True)
+            self._compressor.start()
+            self._committer.start()
+
+    # -- pipeline stages -----------------------------------------------------
+    def _compress(self, keys, items):
+        objs = self._compress_fn(keys, items)
+        if len(objs) != len(keys):      # a silent drop would finalize a
+            raise RuntimeError(         # "successful" stream missing shards
+                f"compress_fn returned {len(objs)} payloads "
+                f"for {len(keys)} keys")
+        return objs
+
+    def _serialize_one(self, obj):
+        t0 = time.perf_counter()
+        payload, meta = self._serialize_fn(obj)
+        return payload, meta, time.perf_counter() - t0
+
+    def _compress_loop(self):
+        while True:
+            batch = self._cq.get()
+            if batch is _SENTINEL:
+                self._wq.put(_SENTINEL)
+                return
+            keys, items, metas = batch
+            try:
+                t0 = time.perf_counter()
+                objs = self._compress(keys, items)
+                self.stats.compress_s += time.perf_counter() - t0
+                for key, obj, m in zip(keys, objs, metas):
+                    fut = self._pool.submit(self._serialize_one, obj)
+                    self._wq.put((key, fut, m))     # bounded: backpressure
+            except BaseException as e:              # propagate via close()
+                self._error = self._error or e
+                # drain remaining submissions so a producer blocked on the
+                # bounded queue can't deadlock against a dead compressor
+                while self._cq.get() is not _SENTINEL:
+                    pass
+                self._wq.put(_SENTINEL)
+                return
+
+    def _commit_loop(self):
+        while True:
+            item = self._wq.get()
+            if item is _SENTINEL:
+                return
+            key, fut, user_meta = item
+            try:
+                payload, meta, ser_s = fut.result()
+                # after a failure only drain (the stream is doomed and
+                # will be aborted) — don't pay for further commits
+                if self._error is None:
+                    self.stats.serialize_s += ser_s
+                    self._commit(key, payload, meta, user_meta)
+            except BaseException as e:
+                self._error = self._error or e
+                # keep draining so the compressor never deadlocks on _wq
+                continue
+
+    def _commit(self, key, payload, meta, user_meta):
+        merged = dict(meta or {})
+        if user_meta:
+            merged.update(user_meta)
+        rec = self._writer.append(key, payload, merged)
+        self.stats.n_records += 1
+        self.stats.stored_bytes += rec["nbytes"]
+        self.stats.raw_bytes += int(merged.get("raw_nbytes", 0))
+        self.stats.records.append(rec)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, key: str, item: Any, meta: Optional[Dict] = None):
+        """Queue one shard (compressed as its own unit)."""
+        self.submit_batch([key], [item], [meta])
+
+    def submit_batch(self, keys: Sequence[str], items: Sequence[Any],
+                     metas: Optional[Sequence[Optional[Dict]]] = None):
+        """Queue a group of shards compressed as ONE unit (e.g. one
+        fused batched device pass); payloads still commit per shard."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        self._check_error()
+        keys, items = list(keys), list(items)
+        metas = list(metas) if metas is not None else [None] * len(keys)
+        metas = [self._default_meta(it, m) for it, m in zip(items, metas)]
+        if self._sync:
+            t0 = time.perf_counter()
+            objs = self._compress(keys, items)
+            self.stats.compress_s += time.perf_counter() - t0
+            for key, obj, m in zip(keys, objs, metas):
+                payload, meta, ser_s = self._serialize_one(obj)
+                self.stats.serialize_s += ser_s
+                self._commit(key, payload, meta, m)
+            return
+        self._cq.put((keys, items, metas))
+
+    @staticmethod
+    def _default_meta(item, meta: Optional[Dict]) -> Dict:
+        out = dict(meta or {})
+        if "raw_nbytes" not in out and isinstance(item, np.ndarray):
+            out["raw_nbytes"] = int(item.nbytes)
+        return out
+
+    def _check_error(self):
+        if self._error is not None:
+            raise RuntimeError(
+                f"async engine failed: {self._error!r}") from self._error
+
+    def close(self, extra_meta: Optional[Dict] = None) -> EngineStats:
+        """Drain the pipeline, finalize the stream, return stats.
+
+        Raises (after cleaning up the temp file) if any stage failed —
+        a partially-compressed stream is never renamed into place.
+        """
+        if self._closed:
+            return self.stats
+        self._closed = True
+        if not self._sync:
+            self._cq.put(_SENTINEL)
+            self._compressor.join()
+            self._committer.join()
+            self._pool.shutdown(wait=True)
+        if self._error is not None:
+            self._writer.abort()
+            self._check_error()
+        self.stats.write_s = self._writer.write_s
+        try:
+            self._writer.close(extra_meta)
+        except BaseException:       # footer/fsync failed: no orphan .tmp
+            self._writer.abort()
+            raise
+        self.stats.wall_s = time.perf_counter() - self._t0
+        return self.stats
+
+    def abort(self):
+        """Tear down without finalizing (temp file removed)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._error = self._error or RuntimeError("aborted")
+        if not self._sync:
+            self._cq.put(_SENTINEL)
+            self._compressor.join()
+            self._committer.join()
+            self._pool.shutdown(wait=True)
+        self._writer.abort()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+        return False
+
+
+def ceaz_compress_fn(comp=None, plan=None) -> Callable:
+    """Standard compress stage: the CEAZ facade's batch entry point
+    (one fused device pass per submitted group when eligible, staged
+    per-shard fallback otherwise)."""
+    from ..core import CEAZ, CEAZConfig
+    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+
+    def _fn(keys, items):
+        return comp.compress_batch(items, plan=plan)
+    return _fn
+
+
+def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
+                 *, sync: bool = False, group: int = 2,
+                 writers: int = 2, max_inflight: int = 2, plan=None,
+                 meta: Optional[Dict] = None,
+                 emulate_bps: Optional[float] = None,
+                 fsync: bool = True) -> EngineStats:
+    """Compress `shards` into one stream file, overlapped (or sync).
+
+    Shards are grouped `group` at a time: each group is one batched
+    fused device pass, and compression of group i+1 overlaps the
+    ordered commit of group i. Grouping never changes the bytes (each
+    shard keeps its own adaptive-coder stream), only the overlap grain.
+    """
+    eng = AsyncCompressWriteEngine(
+        path, ceaz_compress_fn(comp, plan), writers=writers,
+        max_inflight=max_inflight, meta=meta, sync=sync,
+        emulate_bps=emulate_bps, fsync=fsync)
+    with eng:
+        shards = [np.asarray(s) for s in shards]
+        group = max(1, group)
+        for s in range(0, len(shards), group):
+            grp = shards[s:s + group]
+            keys = [f"shard_{s + j:05d}" for j in range(len(grp))]
+            metas = [{"shape": list(a.shape), "dtype": str(a.dtype),
+                      "raw_nbytes": int(a.nbytes)} for a in grp]
+            eng.submit_batch(keys, grp, metas)
+    return eng.stats

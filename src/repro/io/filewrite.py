@@ -1,106 +1,75 @@
 """Parallel compressed file write: the paper's MPI_File_write scenario.
 
 Each rank compresses its shard with the full adaptive CEAZ pipeline and
-writes an independent segment; a manifest stitches the logical file. This
-is the cosmology-dump path (examples/parallel_io_demo.py) and shares the
-atomicity discipline of checkpoint/ckpt.py.
+the payloads land in ONE aggregated, self-describing stream file — the
+two-phase collective-write shape: phase 1 (per-rank compression, the
+fused device pipeline) overlaps phase 2 (ordered aggregated append)
+through `repro.io.engine`. This is the cosmology-dump path
+(examples/parallel_io_demo.py) and shares the atomicity discipline of
+checkpoint/ckpt.py: the stream is written to a temp name and renamed
+only when the footer is committed.
 """
 from __future__ import annotations
 
-import concurrent.futures as futures
-import json
 import os
-import pickle
-import tempfile
-import time
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from ..core import CEAZ, CEAZConfig
+from . import engine as E
+
+DUMP_NAME = "dump.ceazs"
 
 
 def parallel_compressed_write(directory: str, shards: Sequence[np.ndarray],
                               comp: Optional[CEAZ] = None,
                               workers: int = 4, use_fused: bool = True,
-                              plan=None) -> dict:
-    """Compress + write shards concurrently; returns timing/size stats.
+                              plan=None, overlap: bool = True,
+                              group: int = 2,
+                              emulate_bps: Optional[float] = None,
+                              fsync: bool = True) -> dict:
+    """Compress + write shards into <directory>/dump.ceazs; returns stats.
 
-    With ``use_fused`` (default) and homogeneous float32 shards, the
-    compression stage runs as ONE device-resident fused batch over all
-    shards (optionally mesh-sharded via `plan`); only the file writes
-    stay on the worker threads. Heterogeneous/float64 inputs keep the
-    per-shard staged path.
+    With ``overlap`` (default) the async engine double-buffers: the
+    fused device pipeline compresses shard group i+1 while the committer
+    appends group i. ``overlap=False`` is the synchronous reference —
+    byte-identical output (tests/test_engine.py), serial timing. The
+    compression policy lives entirely in the facade: float64, ragged or
+    value-direct shards transparently take the staged path inside
+    ``CEAZ.compress_batch``.
     """
     comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+    if not use_fused:
+        import dataclasses
+        comp = CEAZ(dataclasses.replace(comp.cfg, use_fused=False),
+                    offline_codebook=comp.offline)
     os.makedirs(directory, exist_ok=True)
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_dump_")
-    t0 = time.perf_counter()
-
-    # The batched path must honor the caller's compressor policy: it is
-    # taken only for configs it can express (fused rel-mode Lorenzo; the
-    # chi thresholds and build flags are forwarded). Anything else —
-    # value-direct/auto predictor, float64, ragged shards, use_fused
-    # off — keeps per-shard comp.compress semantics.
-    fused_ok = (use_fused and comp.cfg.use_fused
-                and comp.cfg.mode == "rel"
-                and comp.cfg.predictor == "lorenzo"
-                and len({s.shape for s in shards}) == 1
-                and all(s.dtype == np.float32 for s in shards))
-    precomp: List[Optional[object]] = [None] * len(shards)
-    if fused_ok:
-        from ..runtime import fused
-        cv = max(comp.cfg.chunk_bytes // 4, comp.cfg.block_size)
-        tc0 = time.perf_counter()
-        precomp = fused.batch_compress(
-            list(shards), comp.cfg.eb, cv, comp.cfg.block_size,
-            offline=comp.offline, plan=plan,
-            tau0=comp.cfg.tau0, tau1=comp.cfg.tau1,
-            adaptive=comp.cfg.adaptive,
-            exact_build=comp.cfg.exact_build)
-        tc_batch = (time.perf_counter() - tc0) / max(len(shards), 1)
-
-    def write_one(i_shard):
-        i, shard = i_shard
-        t = time.perf_counter()
-        c = precomp[i] if precomp[i] is not None else comp.compress(shard)
-        tc = (tc_batch if precomp[i] is not None
-              else time.perf_counter() - t)
-        path = os.path.join(tmp, f"shard_{i:05d}.ceaz")
-        with open(path, "wb") as f:
-            pickle.dump(c, f, protocol=4)
-        return dict(rank=i, raw=shard.nbytes, stored=c.nbytes(),
-                    ratio=c.ratio(), compress_s=tc)
-
-    with futures.ThreadPoolExecutor(max_workers=workers) as ex:
-        stats = list(ex.map(write_one, enumerate(shards)))
-    manifest = {"n_shards": len(shards),
-                "dtype": str(shards[0].dtype),
-                "shapes": [list(s.shape) for s in shards],
-                "stats": stats}
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    final = os.path.join(directory, "dump")
-    if os.path.exists(final):
-        import shutil
-        shutil.rmtree(final)
-    os.replace(tmp, final)
-    wall = time.perf_counter() - t0
-    raw = sum(s["raw"] for s in stats)
-    stored = sum(s["stored"] for s in stats)
-    return dict(wall_s=wall, raw_bytes=raw, stored_bytes=stored,
-                ratio=raw / stored,
-                effective_mbs=raw / wall / 1e6, shards=stats)
+    shards = [np.asarray(s) for s in shards]
+    stats = E.write_stream(
+        os.path.join(directory, DUMP_NAME), shards, comp,
+        sync=not overlap, group=group, writers=workers,
+        meta={"kind": "parallel_dump", "n_shards": len(shards),
+              "dtype": str(shards[0].dtype) if shards else None,
+              "shapes": [list(s.shape) for s in shards]},
+        plan=plan, emulate_bps=emulate_bps, fsync=fsync)
+    d = stats.as_dict()
+    per_shard = [dict(rank=i, raw=int(r.get("raw_nbytes", 0)),
+                      stored=int(r["nbytes"]))
+                 for i, r in enumerate(d.pop("records"))]
+    raw = max(d["raw_bytes"], 1)
+    return dict(wall_s=d["wall_s"], raw_bytes=d["raw_bytes"],
+                stored_bytes=d["stored_bytes"],
+                ratio=d["raw_bytes"] / max(d["stored_bytes"], 1),
+                effective_mbs=raw / max(d["wall_s"], 1e-9) / 1e6,
+                compress_s=d["compress_s"], write_s=d["write_s"],
+                overlap_efficiency=d["overlap_efficiency"],
+                shards=per_shard)
 
 
 def parallel_read(directory: str, comp: Optional[CEAZ] = None
                   ) -> List[np.ndarray]:
+    """Validate + decompress every shard of a dump stream (index, record
+    headers and checksums verified; corruption raises loudly)."""
     comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4))
-    d = os.path.join(directory, "dump")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    out = []
-    for i in range(manifest["n_shards"]):
-        with open(os.path.join(d, f"shard_{i:05d}.ceaz"), "rb") as f:
-            out.append(comp.decompress(pickle.load(f)))
-    return out
+    return E.read_stream_arrays(os.path.join(directory, DUMP_NAME), comp)

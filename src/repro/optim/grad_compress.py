@@ -179,6 +179,17 @@ def payload_fraction(bits: int) -> float:
 # pipeline instead of a staged host loop.
 # ---------------------------------------------------------------------------
 
+def _grad_compressor(eb_rel: float, chunk_bytes: int):
+    from ..core import CEAZ, CEAZConfig
+    return CEAZ(CEAZConfig(mode="rel", eb=eb_rel, chunk_bytes=chunk_bytes,
+                           predictor="auto", use_fused=True))
+
+
+def _compressible(arr: np.ndarray, min_compress: int) -> bool:
+    return bool(arr.dtype == np.float32 and arr.size >= min_compress
+                and np.all(np.isfinite(arr)))
+
+
 def snapshot_grads(grads, eb_rel: float = 1e-3,
                    chunk_bytes: int = 1 << 22,
                    min_compress: int = 4096):
@@ -189,19 +200,14 @@ def snapshot_grads(grads, eb_rel: float = 1e-3,
     value-direct host path, smooth ones to the fused Lorenzo path);
     small leaves are stored raw.
     """
-    from ..core import CEAZ, CEAZConfig
     from ..runtime import compat
-    comp = CEAZ(CEAZConfig(mode="rel", eb=eb_rel, chunk_bytes=chunk_bytes,
-                           predictor="auto", use_fused=True))
+    comp = _grad_compressor(eb_rel, chunk_bytes)
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
         key = compat.keystr(path)
         arr = np.asarray(leaf)
-        if (arr.dtype == np.float32 and arr.size >= min_compress
-                and np.all(np.isfinite(arr))):
-            out[key] = comp.compress(arr)
-        else:
-            out[key] = arr
+        out[key] = (comp.compress(arr)
+                    if _compressible(arr, min_compress) else arr)
     return out
 
 
@@ -211,3 +217,48 @@ def restore_grad_snapshot(snapshot):
     comp = CEAZ()
     return {k: (comp.decompress(v) if isinstance(v, CEAZCompressed) else v)
             for k, v in snapshot.items()}
+
+
+def snapshot_grads_to_stream(path: str, grads, eb_rel: float = 1e-3,
+                             chunk_bytes: int = 1 << 22,
+                             min_compress: int = 4096,
+                             overlap: bool = True):
+    """Stream a gradient snapshot straight to disk through the async
+    compression-I/O engine: the fused pipeline compresses leaf i+1 while
+    the committer appends leaf i to one indexed `.ceazs` stream. Returns
+    the engine stats dict (raw/stored bytes, overlap efficiency).
+    """
+    from ..io import engine as E
+    from ..runtime import compat
+    comp = _grad_compressor(eb_rel, chunk_bytes)
+
+    def encode(keys, items):
+        return [comp.compress(a) if _compressible(a, min_compress) else a
+                for a in items]
+
+    eng = E.AsyncCompressWriteEngine(
+        path, encode, sync=not overlap,
+        meta={"kind": "grad_snapshot", "eb_rel": eb_rel})
+    with eng:
+        for p, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
+            arr = np.asarray(leaf)
+            eng.submit(compat.keystr(p), arr,
+                       meta={"shape": list(arr.shape),
+                             "dtype": str(arr.dtype),
+                             "raw_nbytes": int(arr.nbytes)})
+    return eng.stats.as_dict()
+
+
+def restore_grad_snapshot_stream(path: str):
+    """Read a streamed snapshot back as {path: np.ndarray}, validating
+    the stream index and checksums."""
+    from ..core import CEAZ, CEAZCompressed
+    from ..io import engine as E
+    comp = CEAZ()
+    out = {}
+    with E.StreamReader(path) as r:
+        for rec, obj in r.iter_objects():
+            if isinstance(obj, CEAZCompressed):
+                obj = comp.decompress(obj)
+            out[rec["key"]] = obj
+    return out

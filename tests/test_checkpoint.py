@@ -55,9 +55,10 @@ def test_corruption_falls_back(tmp_ckpt):
     cfg, state = _state()
     C.save_checkpoint(tmp_ckpt, state, step=1)
     C.save_checkpoint(tmp_ckpt, state, step=2)
-    with open(os.path.join(tmp_ckpt, "step_00000002", "leaf_00000.bin"),
-              "wb") as f:
-        f.write(b"corrupted")
+    stream = os.path.join(tmp_ckpt, "step_00000002", C.LEAVES_STREAM)
+    with open(stream, "r+b") as f:
+        f.seek(os.path.getsize(stream) // 2)
+        f.write(b"corrupted")                  # flips payload bytes mid-leaf
     restored, meta = C.restore_checkpoint(tmp_ckpt)
     assert meta["step"] == 1
 

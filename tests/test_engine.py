@@ -1,0 +1,249 @@
+"""Async compression-I/O engine: ordered-commit byte-identity, overlap
+accounting, backpressure, and crash-safety of the stream format
+(truncated file, corrupted footer, corrupted payload, out-of-order
+shard commit must all fail loudly on read — never silent garbage)."""
+import os
+import struct
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CEAZ, CEAZConfig
+from repro.data import fields as F
+from repro.io import engine as E
+
+
+@pytest.fixture(scope="module")
+def shards():
+    return [F.nyx_proxy(seed=s) for s in range(4)]
+
+
+def _write(path, shards, **kw):
+    return E.write_stream(str(path), shards,
+                          CEAZ(CEAZConfig(mode="rel", eb=1e-4,
+                                          use_fused=True)),
+                          fsync=False, **kw)
+
+
+# -- ordered commit / byte identity -----------------------------------------
+
+def test_async_byte_identical_to_sync(tmp_path, shards):
+    """The whole point of ordered commit: overlap must not change a
+    single byte of the stream."""
+    _write(tmp_path / "async.ceazs", shards, sync=False)
+    _write(tmp_path / "sync.ceazs", shards, sync=True)
+    a = (tmp_path / "async.ceazs").read_bytes()
+    b = (tmp_path / "sync.ceazs").read_bytes()
+    assert a == b
+
+
+def test_grouping_does_not_change_bytes(tmp_path, shards):
+    """Each shard keeps its own adaptive-coder stream, so the overlap
+    grain (group size) must be payload-invariant."""
+    _write(tmp_path / "g1.ceazs", shards, group=1)
+    _write(tmp_path / "g4.ceazs", shards, group=4)
+    assert (tmp_path / "g1.ceazs").read_bytes() \
+        == (tmp_path / "g4.ceazs").read_bytes()
+
+
+def test_round_trip_within_bound(tmp_path, shards):
+    _write(tmp_path / "s.ceazs", shards)
+    back = E.read_stream_arrays(str(tmp_path / "s.ceazs"))
+    for a, b in zip(back, shards):
+        eb = 1e-4 * (b.max() - b.min())
+        assert np.abs(a - b).max() <= eb
+
+
+def test_stats_account_stages(tmp_path, shards):
+    st = _write(tmp_path / "s.ceazs", shards)
+    assert st.n_records == len(shards)
+    assert st.raw_bytes == sum(s.nbytes for s in shards)
+    assert st.stored_bytes < st.raw_bytes
+    assert st.wall_s > 0 and st.compress_s > 0 and st.write_s > 0
+
+
+# -- crash safety of the read side ------------------------------------------
+
+def _good_stream(tmp_path):
+    path = str(tmp_path / "good.ceazs")
+    w = E.StreamWriter(path, fsync=False)
+    for i, payload in enumerate([b"alpha" * 40, b"bravo" * 55,
+                                 b"charlie" * 33]):
+        w.append(f"k{i}", payload, {"codec": "raw"})
+    w.close()
+    return path
+
+
+def test_truncated_file_fails_loudly(tmp_path):
+    path = _good_stream(tmp_path)
+    data = open(path, "rb").read()
+    for cut in (10, len(data) // 2, len(data) - 7):
+        with open(path, "wb") as f:
+            f.write(data[:cut])
+        with pytest.raises(E.StreamCorruptionError):
+            E.StreamReader(path)
+
+
+def test_corrupted_footer_checksum_fails_loudly(tmp_path):
+    path = _good_stream(tmp_path)
+    data = bytearray(open(path, "rb").read())
+    foot_off, foot_len, _, _ = E.TRAILER.unpack(data[-E.TRAILER.size:])
+    data[foot_off + foot_len // 2] ^= 0xFF      # flip a byte inside footer
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(E.StreamCorruptionError, match="footer checksum"):
+        E.StreamReader(path)
+
+
+def test_corrupted_payload_fails_loudly(tmp_path):
+    path = _good_stream(tmp_path)
+    r = E.StreamReader(path)
+    off = r.records[1]["offset"] + E.RECORD_HEADER.size + 3
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    data[off] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    r = E.StreamReader(path)                    # index itself is intact
+    with pytest.raises(E.StreamCorruptionError, match="checksum"):
+        r.payload(1)
+
+
+def test_out_of_order_commit_fails_loudly(tmp_path):
+    """Each payload block self-identifies with its seq; a committer that
+    swapped two shards is caught even when the index looks sane."""
+    path = _good_stream(tmp_path)
+    r = E.StreamReader(path)
+    off0, off1 = r.records[0]["offset"], r.records[1]["offset"]
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    # rewrite the embedded seq fields as an out-of-order committer would
+    # have: record slot 0 holds shard 1's block and vice versa
+    struct.pack_into("<I", data, off0 + 4, 1)
+    struct.pack_into("<I", data, off1 + 4, 0)
+    open(path, "wb").write(bytes(data))
+    r = E.StreamReader(path)
+    with pytest.raises(E.StreamCorruptionError, match="out-of-order"):
+        r.payload(0)
+
+
+def test_index_seq_permutation_fails_at_open(tmp_path):
+    path = _good_stream(tmp_path)
+    r = E.StreamReader(path)
+    foot_off = r.records[-1]["offset"] + E.RECORD_HEADER.size \
+        + r.records[-1]["nbytes"]
+    r.close()
+    import json
+    import zlib
+    data = bytearray(open(path, "rb").read())
+    _, foot_len, _, _ = E.TRAILER.unpack(data[-E.TRAILER.size:])
+    doc = json.loads(bytes(data[foot_off:foot_off + foot_len]))
+    doc["records"][0], doc["records"][1] = (doc["records"][1],
+                                            doc["records"][0])
+    footer = json.dumps(doc, sort_keys=True,
+                        separators=(",", ":")).encode()
+    data = data[:foot_off] + footer + E.TRAILER.pack(
+        foot_off, len(footer), zlib.crc32(footer) & 0xFFFFFFFF,
+        E.END_MAGIC)
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(E.StreamCorruptionError, match="out-of-order"):
+        E.StreamReader(path)
+
+
+# -- engine failure + backpressure behavior ----------------------------------
+
+def test_compress_error_propagates_and_no_file(tmp_path):
+    path = str(tmp_path / "boom.ceazs")
+
+    def bad_compress(keys, items):
+        raise ValueError("compressor exploded")
+
+    eng = E.AsyncCompressWriteEngine(path, bad_compress, fsync=False)
+    eng.submit("a", np.zeros(8, np.float32))
+    with pytest.raises(RuntimeError, match="compressor exploded"):
+        # either submit or close surfaces it, depending on timing
+        for _ in range(64):
+            eng.submit("b", np.zeros(8, np.float32))
+        eng.close()
+    assert not os.path.exists(path)             # never finalized
+
+
+def test_backpressure_bounds_inflight(tmp_path):
+    """A slow committer must stall compression at max_inflight, not let
+    it run ahead of storage unboundedly."""
+    inflight, peak = [0], [0]
+    lock = threading.Lock()
+
+    def compress(keys, items):
+        with lock:
+            inflight[0] += 1
+            peak[0] = max(peak[0], inflight[0])
+        return [np.asarray(i).tobytes() for i in items]
+
+    def slow_serialize(obj):
+        import time
+        time.sleep(0.02)
+        with lock:
+            inflight[0] -= 1
+        return obj, {"codec": "raw"}
+
+    eng = E.AsyncCompressWriteEngine(
+        str(tmp_path / "bp.ceazs"), compress, slow_serialize,
+        max_inflight=2, writers=1, fsync=False)
+    with eng:
+        for i in range(16):
+            eng.submit(f"k{i}", np.full(4, i, np.float32))
+    # compress runs ahead of the slow writer by at most the two bounded
+    # queues plus the item in flight
+    assert peak[0] <= 2 * 2 + 1, peak[0]
+    assert len(E.StreamReader(str(tmp_path / "bp.ceazs"))) == 16
+
+
+# -- consumers ---------------------------------------------------------------
+
+def test_gather_stream_round_trip(tmp_path):
+    from repro.io.collectives import ceaz_gather_stream
+    shards = [F.nyx_proxy(seed=s) for s in range(3)]
+    stats = ceaz_gather_stream(shards, str(tmp_path / "g.ceazs"))
+    assert stats["n_ranks"] == 3
+    assert stats["ratio"] > 3.0
+    back = E.read_stream_arrays(str(tmp_path / "g.ceazs"))
+    for a, b in zip(back, shards):
+        assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+
+
+def test_grad_snapshot_stream_round_trip(tmp_path):
+    from repro.optim.grad_compress import (restore_grad_snapshot_stream,
+                                           snapshot_grads_to_stream)
+    rng = np.random.default_rng(0)
+    grads = {"w": F.nyx_proxy(seed=1),
+             "b": rng.standard_normal(16).astype(np.float32),
+             "step": np.int32(7)}
+    path = str(tmp_path / "snap.ceazs")
+    stats = snapshot_grads_to_stream(path, grads, eb_rel=1e-3)
+    assert stats["n_records"] == 3
+    back = restore_grad_snapshot_stream(path)
+    w = grads["w"]
+    assert np.abs(back["w"] - w).max() <= 1e-3 * (w.max() - w.min())
+    assert np.array_equal(back["b"], grads["b"])        # small leaf raw
+    assert back["step"] == 7
+
+
+def test_compress_batch_staged_fallback_float64(tmp_path):
+    """Satellite regression: float64 / predictor='none' inputs route
+    through the facade's one-line staged fallback — no caller split."""
+    rng = np.random.default_rng(3)
+    x64 = np.cumsum(rng.standard_normal((64, 256))).reshape(64, 256)
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-5, use_fused=True))
+    outs = comp.compress_batch([x64, x64 * 2.0])
+    assert all(c.word_bits == 64 for c in outs)         # staged float64
+    for c, x in zip(outs, [x64, x64 * 2.0]):
+        rec = comp.decompress(c)
+        assert np.abs(rec - x).max() <= 1e-5 * (x.max() - x.min())
+
+    direct = CEAZ(CEAZConfig(mode="rel", eb=1e-4, predictor="none",
+                             use_fused=True))
+    noise = rng.standard_normal(20000).astype(np.float32)
+    (c,) = direct.compress_batch([noise])
+    assert c.predictor == "none"                        # value-direct path
+    rec = direct.decompress(c)
+    assert np.abs(rec - noise).max() <= 1e-4 * (noise.max() - noise.min())
