@@ -348,20 +348,62 @@ class CEAZ:
                               literal_idx=np.concatenate(lit_idx).astype(np.int64),
                               literal_val=np.concatenate(lit_val))
 
+    # -- decode side -----------------------------------------------------------
     def decompress(self, c: CEAZCompressed) -> np.ndarray:
+        """Decode under this facade's policy: with ``use_fused``, eligible
+        float32 Lorenzo streams run the device-resident fused decode
+        (runtime/fused_decode.py — bit-identical to the staged reference);
+        float64 and value-direct streams take the host-staged path."""
+        return self.decompress_batch([c])[0]
+
+    def decompress_batch(self, comps) -> List[np.ndarray]:
+        """Decode a sequence of streams under this facade's policy.
+
+        Eligible float32 Lorenzo streams (any mix of shapes and modes)
+        share ONE batched fused Huffman-decode pass; everything else —
+        float64, value-direct, ``use_fused`` off — transparently takes
+        the host-staged reference path, mirroring ``compress_batch``:
+        callers never need their own eligibility split.
+        """
+        comps = list(comps)
+        out: List[Optional[np.ndarray]] = [None] * len(comps)
+        if self.cfg.use_fused:
+            from ..runtime import fused_decode as FD
+            fused_idx = [i for i, c in enumerate(comps)
+                         if FD.fused_decode_ok(c, self.offline)]
+            if fused_idx:
+                for i in fused_idx:
+                    self._check_block_size(comps[i])
+                dec = FD.decompress_batch([comps[i] for i in fused_idx],
+                                          self.cfg.block_size, self.offline)
+                for i, a in zip(fused_idx, dec):
+                    out[i] = a
+        return [a if a is not None else self._decompress_staged(c)
+                for a, c in zip(out, comps)]
+
+    def _check_block_size(self, c: CEAZCompressed):
+        """Decode needs the encoder's block_size: the wire format carries
+        per-block bit counts but not the block grain itself. A mismatch
+        would pass every checksum (the stored bytes are intact) and decode
+        to garbage — so refuse loudly when the per-chunk block counts are
+        inconsistent with this facade's block_size."""
+        bs = self.cfg.block_size
+        for i, ch in enumerate(c.chunks):
+            expect = max(1, -(-ch.n_values // bs))
+            if len(ch.block_nbits) != expect:
+                raise ValueError(
+                    f"decode block_size={bs} inconsistent with stream: "
+                    f"chunk {i} has {len(ch.block_nbits)} blocks for "
+                    f"{ch.n_values} values (expected {expect}); pass the "
+                    "block_size the stream was compressed with")
+
+    def _decompress_staged(self, c: CEAZCompressed) -> np.ndarray:
+        """Host-staged reference decoder (the bit-exactness oracle)."""
+        from .huffman import replay_codebooks
+        self._check_block_size(c)
         out_dtype = np.dtype(c.dtype)
-        # replay the codebook sequence exactly as the encoder chose it
-        books: List[Codebook] = []
-        current = self.offline
-        for ch in c.chunks:
-            if ch.codebook_lengths is not None:
-                from .huffman import _canonize
-                lengths = ch.codebook_lengths.astype(np.int64)
-                current = Codebook(lengths=ch.codebook_lengths,
-                                   codes=_canonize(lengths))
-            elif ch.action == "offline":
-                current = self.offline
-            books.append(current)
+        # decode tables are memoized per distinct codebook, not per chunk
+        books: List[Codebook] = replay_codebooks(c.chunks, self.offline)
 
         if c.predictor == "none":
             parts = []

@@ -19,6 +19,7 @@ TPU decode pipelines run in parallel).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import heapq
 from typing import Optional, Tuple
@@ -209,6 +210,11 @@ class Codebook:
         return float(np.sum(p * self.lengths))
 
     # -- decode table --------------------------------------------------------
+    def tables(self):
+        """(dec_sym uint16, dec_len uint8) flat decode tables of size
+        2**max_len — built once per Codebook instance and cached."""
+        return self._tables()
+
     def _tables(self):
         if self._dec_sym is None:
             L = self.max_len
@@ -222,6 +228,40 @@ class Codebook:
                 ln[lo:hi] = l
             self._dec_sym, self._dec_len = sym, ln
         return self._dec_sym, self._dec_len
+
+
+@functools.lru_cache(maxsize=512)
+def _codebook_from_lengths_cached(lengths_bytes: bytes) -> Codebook:
+    lengths = np.frombuffer(lengths_bytes, dtype=np.uint8).copy()
+    return Codebook(lengths=lengths, codes=_canonize(lengths.astype(np.int64)))
+
+
+def codebook_from_lengths(lengths: np.ndarray) -> Codebook:
+    """Reconstruct a canonical codebook from its shipped code lengths.
+
+    Memoized on the lengths array: streams reuse the same few codebooks
+    across many chunks (the whole point of the adaptive policy), so the
+    canonize pass AND the 2**max_len decode tables (cached on the shared
+    Codebook instance) are built once per distinct codebook — not per
+    chunk, which dominated host decompression cost.
+    """
+    l8 = np.ascontiguousarray(np.asarray(lengths, dtype=np.uint8))
+    return _codebook_from_lengths_cached(l8.tobytes())
+
+
+def replay_codebooks(chunks, offline: Codebook) -> list:
+    """The decoder-side codebook sequence, exactly as the encoder chose
+    it: shipped lengths rebuild (memoized), 'offline' resets, everything
+    else carries the previous book forward. Shared by the staged and
+    fused decoders — the single source of the replay state machine."""
+    books, current = [], offline
+    for ch in chunks:
+        if ch.codebook_lengths is not None:
+            current = codebook_from_lengths(ch.codebook_lengths)
+        elif ch.action == "offline":
+            current = offline
+        books.append(current)
+    return books
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,45 @@ def ceaz_gather(shards, eb_rel: float = 1e-4, plan=None,
                        ratio=raw / max(wire, 1), n_ranks=len(comps))
 
 
+def ceaz_gather_decode(comps, block_size: int = 4096):
+    """Aggregator-side inverse of `ceaz_gather`: reconstruct every
+    rank's shard from the gathered payloads.
+
+    All ranks' chunks share ONE batched fused Huffman-decode device
+    pass (`CEAZ.decompress_batch`); ragged/float64/value-direct payloads
+    transparently take the staged host path inside the facade. Returns
+    the list of reconstructed arrays in rank order.
+    """
+    from ..core import CEAZ, CEAZConfig
+    comp = CEAZ(CEAZConfig(mode="rel", use_fused=True,
+                           block_size=block_size))
+    return comp.decompress_batch(comps)
+
+
+def read_gather_stream(path: str, block_size: Optional[int] = None,
+                       group: int = 4):
+    """Read an aggregated gather stream back to per-rank arrays.
+
+    The read mirror of `ceaz_gather_stream`: the engine's prefetch
+    thread pulls+deserializes rank records while groups decode as one
+    batched fused device pass each. By default the decode block grain
+    comes from the stream's own footer meta (the writer records it);
+    passing `block_size` explicitly takes precedence — for streams
+    written before the meta existed, or to force a grain (a mismatch
+    with the stream raises rather than decoding garbage). Returns
+    (arrays, stats) where stats carries the read/decode overlap
+    accounting.
+    """
+    from ..core import CEAZ, CEAZConfig
+    from . import engine as E
+    comp = (CEAZ(CEAZConfig(mode="rel", use_fused=True,
+                            block_size=block_size))
+            if block_size is not None else None)
+    with E.AsyncDecodeReadEngine(path, comp, group=group) as eng:
+        arrays = [obj for _, obj in eng]
+    return arrays, eng.stats.as_dict()
+
+
 def ceaz_gather_stream(shards, path: str, eb_rel: float = 1e-4,
                        plan=None, chunk_values: int = 1 << 20,
                        block_size: int = 4096, group: int = 2,
@@ -130,7 +169,8 @@ def ceaz_gather_stream(shards, path: str, eb_rel: float = 1e-4,
                            block_size=block_size))
     eng = E.AsyncCompressWriteEngine(
         path, E.ceaz_compress_fn(comp, plan),
-        sync=not overlap, meta={"kind": "gather", "eb_rel": eb_rel})
+        sync=not overlap, meta={"kind": "gather", "eb_rel": eb_rel},
+        block_size=block_size)
     with eng:
         shards = list(shards)
         for s in range(0, len(shards), max(1, group)):

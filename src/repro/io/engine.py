@@ -237,6 +237,7 @@ class StreamReader:
 
     def __init__(self, path: str):
         self.path = path
+        self._key_to_seq: Optional[Dict[str, int]] = None
         try:
             size = os.path.getsize(path)
         except OSError as e:
@@ -321,6 +322,30 @@ class StreamReader:
     def read_object(self, i: int):
         return deserialize_payload(self.payload(i), self.records[i])
 
+    def read_seq(self, seq: int):
+        """Random access by sequence number: one footer-index lookup and
+        one seek+read — no stream scan. The index is validated dense at
+        open (records[i].seq == i), so seq IS the record position."""
+        if not 0 <= seq < len(self.records):
+            raise IndexError(
+                f"{self.path}: seq {seq} out of range "
+                f"[0, {len(self.records)})")
+        return self.read_object(seq)
+
+    def seq_of(self, key: str) -> int:
+        """Sequence number of the record stored under `key`."""
+        if self._key_to_seq is None:
+            self._key_to_seq = {rec["key"]: i
+                                for i, rec in enumerate(self.records)}
+        try:
+            return self._key_to_seq[key]
+        except KeyError:
+            raise KeyError(f"{self.path}: no record with key {key!r}")
+
+    def read_key(self, key: str):
+        """Random access by record key (footer-index lookup)."""
+        return self.read_seq(self.seq_of(key))
+
     def iter_objects(self) -> Iterator[tuple]:
         for i, rec in enumerate(self.records):
             yield rec, self.read_object(i)
@@ -335,19 +360,216 @@ class StreamReader:
         self.close()
 
 
-def read_stream_arrays(path: str, comp=None) -> List[np.ndarray]:
-    """Decode every record of a stream back to arrays (ceaz records are
-    decompressed with `comp` — default facade config if omitted)."""
-    from ..core import CEAZ
-    comp = comp or CEAZ()
-    out = []
-    with StreamReader(path) as r:
-        for rec, obj in r.iter_objects():
-            from ..core.ceaz import CEAZCompressed
-            if isinstance(obj, CEAZCompressed):
-                obj = comp.decompress(obj)
-            out.append(obj)
-    return out
+# ---------------------------------------------------------------------------
+# Read side: prefetch-thread -> device-decode pipeline
+# ---------------------------------------------------------------------------
+
+def _overlap_efficiency(stage_a_s: float, stage_b_s: float,
+                        wall_s: float) -> float:
+    """How much of two stages' serial cost a pipeline hid (1.0 = the
+    wall clock collapsed to the busier stage). Shared by the write and
+    read engines so both directions score overlap identically."""
+    serial = stage_a_s + stage_b_s
+    if serial <= 0 or wall_s <= 0:
+        return 0.0
+    busy = max(stage_a_s, stage_b_s)
+    if serial == busy:
+        return 1.0
+    return max(0.0, min(1.0, (serial - wall_s) / (serial - busy)))
+
+
+@dataclasses.dataclass
+class ReadStats:
+    """Per-run accounting for the decode read engine; `read_s` is the
+    prefetch thread's file+deserialize time, `decode_s` the device
+    decode time the prefetch overlapped with."""
+    n_records: int = 0
+    stored_bytes: int = 0
+    raw_bytes: int = 0
+    wall_s: float = 0.0
+    read_s: float = 0.0
+    decode_s: float = 0.0
+
+    def overlap_efficiency(self) -> float:
+        return _overlap_efficiency(self.read_s, self.decode_s, self.wall_s)
+
+    def as_dict(self) -> Dict:
+        return {"n_records": self.n_records,
+                "stored_bytes": self.stored_bytes,
+                "raw_bytes": self.raw_bytes, "wall_s": self.wall_s,
+                "read_s": self.read_s, "decode_s": self.decode_s,
+                "overlap_efficiency": self.overlap_efficiency()}
+
+
+class AsyncDecodeReadEngine:
+    """Streaming restore pipeline over one ``.ceazs`` stream.
+
+    The write engine hides compression behind the commit path; this is
+    the mirror for the read path:
+
+      prefetch thread --> [bounded queue] --> caller's thread
+       validated payload                      groups of `group` records
+       read + deserialize                     decoded as ONE batched
+       of record i+1                          fused device pass each
+
+    While the device runs the fused Huffman-decode pass for group i, the
+    prefetch thread is already reading and unpickling group i+1 — the
+    records never take a host-numpy decode bounce: ``CEAZCompressed``
+    payloads go straight into ``CEAZ.decompress_batch`` (which routes
+    eligible streams to runtime/fused_decode and the rest to the staged
+    reference). Iteration yields ``(index_record, decoded_object)`` in
+    commit order. ``sync=True`` runs the same stages inline — the
+    equal-results reference for tests.
+
+    Backpressure: the queue is bounded by ``max_inflight`` groups, so a
+    slow decoder stalls the file reads instead of buffering the whole
+    stream in memory.
+    """
+
+    def __init__(self, path: str, comp=None, *, group: int = 8,
+                 max_inflight: int = 2, sync: bool = False):
+        from ..core import CEAZ, CEAZConfig
+        self._reader = StreamReader(path)   # validates trailer/footer/index
+        if comp is None:
+            # decode needs the encoder's block grain; self-describing
+            # streams record it in the footer meta
+            bs = int(self._reader.meta.get("block_size", 4096))
+            comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                                   block_size=bs))
+        self._comp = comp
+        self._group = max(1, group)
+        self._sync = sync
+        self.stats = ReadStats()
+        self._t0 = time.perf_counter()
+        self._stop = False
+        self._consumed = False
+        if not sync:
+            self._q: queue.Queue = queue.Queue(
+                maxsize=max(1, max_inflight) * self._group)
+            self._prefetcher = threading.Thread(
+                target=self._prefetch_loop, name="ceazs-prefetch",
+                daemon=True)
+            self._prefetcher.start()
+
+    @property
+    def meta(self) -> Dict:
+        return self._reader.meta
+
+    @property
+    def records(self) -> List[Dict]:
+        return self._reader.records
+
+    def __len__(self) -> int:
+        return len(self._reader)
+
+    # -- pipeline stages -----------------------------------------------------
+    def _read_one(self, i: int):
+        t0 = time.perf_counter()
+        obj = self._reader.read_object(i)      # header+crc32 verified
+        self.stats.read_s += time.perf_counter() - t0
+        return self._reader.records[i], obj
+
+    def _put(self, item) -> bool:
+        """Bounded put that gives up when the consumer went away —
+        backpressure without deadlocking an abandoned engine."""
+        while not self._stop:
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _prefetch_loop(self):
+        try:
+            for i in range(len(self._reader)):
+                if not self._put(self._read_one(i)):
+                    return
+            self._put(_SENTINEL)
+        except BaseException as e:              # surfaced on the consumer
+            self._put(("__error__", e))
+
+    def _decode_group(self, batch: List[tuple]) -> List[tuple]:
+        from ..core.ceaz import CEAZCompressed
+        idx = [i for i, (_, obj) in enumerate(batch)
+               if isinstance(obj, CEAZCompressed)]
+        if idx:
+            t0 = time.perf_counter()
+            dec = self._comp.decompress_batch(
+                [batch[i][1] for i in idx])
+            self.stats.decode_s += time.perf_counter() - t0
+            for i, arr in zip(idx, dec):
+                batch[i] = (batch[i][0], arr)
+        for rec, obj in batch:
+            self.stats.n_records += 1
+            self.stats.stored_bytes += int(rec.get("nbytes", 0))
+            if isinstance(obj, np.ndarray):
+                self.stats.raw_bytes += int(obj.nbytes)
+        return batch
+
+    # -- public API ----------------------------------------------------------
+    def __iter__(self) -> Iterator[tuple]:
+        """(index_record, decoded_object) in commit order; groups of
+        `group` records decode as one batched device pass. One-shot:
+        the stream is consumed as it decodes — re-open to re-read."""
+        if self._consumed:
+            raise RuntimeError(
+                "AsyncDecodeReadEngine is one-shot: the prefetch thread "
+                "has already drained the stream; open a new engine to "
+                "re-read it")
+        self._consumed = True
+        if self._sync:
+            n = len(self._reader)
+            for s in range(0, n, self._group):
+                batch = [self._read_one(i)
+                         for i in range(s, min(s + self._group, n))]
+                yield from self._decode_group(batch)
+            self.stats.wall_s = time.perf_counter() - self._t0
+            return
+        batch: List[tuple] = []
+        done = False
+        while not done:
+            item = self._q.get()
+            if item is _SENTINEL:
+                done = True
+            elif isinstance(item, tuple) and item[0] == "__error__":
+                self._stop = True
+                raise item[1]
+            else:
+                batch.append(item)
+            if batch and (done or len(batch) >= self._group):
+                yield from self._decode_group(batch)
+                batch = []
+        self.stats.wall_s = time.perf_counter() - self._t0
+
+    def objects(self) -> List[tuple]:
+        return list(self)
+
+    def close(self):
+        self._stop = True
+        if not self._sync:
+            self._prefetcher.join(timeout=5.0)
+            while True:                         # unblock a parked put
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+        self._reader.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def read_stream_arrays(path: str, comp=None, *, group: int = 8,
+                       sync: bool = False) -> List[np.ndarray]:
+    """Decode every record of a stream back to arrays through the
+    prefetch -> batched-fused-decode pipeline (ceaz records are
+    decompressed with `comp` — fused facade config if omitted)."""
+    with AsyncDecodeReadEngine(path, comp, group=group, sync=sync) as eng:
+        return [obj for _, obj in eng]
 
 
 # ---------------------------------------------------------------------------
@@ -374,14 +596,8 @@ class EngineStats:
         return self.raw_bytes / max(self.stored_bytes, 1)
 
     def overlap_efficiency(self) -> float:
-        serial = self.compress_s + self.write_s
-        if serial <= 0 or self.wall_s <= 0:
-            return 0.0
-        busy = max(self.compress_s, self.write_s)
-        if serial == busy:
-            return 1.0
-        return max(0.0, min(1.0, (serial - self.wall_s)
-                            / (serial - busy)))
+        return _overlap_efficiency(self.compress_s, self.write_s,
+                                   self.wall_s)
 
     def as_dict(self) -> Dict:
         return {"n_records": self.n_records, "raw_bytes": self.raw_bytes,
@@ -412,9 +628,17 @@ class AsyncCompressWriteEngine:
                  serialize_fn: Callable[[Any], tuple] = serialize_payload,
                  *, writers: int = 2, max_inflight: int = 2,
                  meta: Optional[Dict] = None, sync: bool = False,
-                 emulate_bps: Optional[float] = None, fsync: bool = True):
+                 emulate_bps: Optional[float] = None, fsync: bool = True,
+                 block_size: Optional[int] = None):
         self._compress_fn = compress_fn
         self._serialize_fn = serialize_fn
+        meta = dict(meta or {})
+        # self-description: readers must decode with the block grain the
+        # stream was compressed with — consumers whose compress stage
+        # produces CEAZ payloads pass their facade's block_size here so
+        # default readers can self-configure from the footer meta
+        if block_size is not None:
+            meta.setdefault("block_size", int(block_size))
         self._writer = StreamWriter(path, meta=meta,
                                     emulate_bps=emulate_bps, fsync=fsync)
         self._sync = sync
@@ -617,7 +841,8 @@ def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
     eng = AsyncCompressWriteEngine(
         path, ceaz_compress_fn(comp, plan), writers=writers,
         max_inflight=max_inflight, meta=meta, sync=sync,
-        emulate_bps=emulate_bps, fsync=fsync)
+        emulate_bps=emulate_bps, fsync=fsync,
+        block_size=comp.cfg.block_size if comp is not None else 4096)
     with eng:
         shards = [np.asarray(s) for s in shards]
         group = max(1, group)

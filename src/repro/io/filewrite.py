@@ -70,6 +70,7 @@ def parallel_compressed_write(directory: str, shards: Sequence[np.ndarray],
 def parallel_read(directory: str, comp: Optional[CEAZ] = None
                   ) -> List[np.ndarray]:
     """Validate + decompress every shard of a dump stream (index, record
-    headers and checksums verified; corruption raises loudly)."""
-    comp = comp or CEAZ(CEAZConfig(mode="rel", eb=1e-4))
+    headers and checksums verified; corruption raises loudly). With
+    `comp` omitted the reader self-configures from the stream's footer
+    meta (decode block grain) and takes the fused decode path."""
     return E.read_stream_arrays(os.path.join(directory, DUMP_NAME), comp)

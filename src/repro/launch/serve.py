@@ -88,6 +88,38 @@ def cache_shardings(cache, plan: ShardingPlan, batch_sharded: bool = True):
         lambda p, l: NamedSharding(plan.mesh, leaf_spec(p, l)), cache)
 
 
+def restore_serving_params(directory: str, plan: ShardingPlan,
+                           step: Optional[int] = None, ckpt_cfg=None,
+                           dtype=jnp.bfloat16):
+    """Startup restore for serving: checkpoint leaf stream -> engine-fed
+    fused decode -> serving-dtype cast -> placement on the serve mesh.
+
+    Leaf records stream through the read engine (prefetch thread +
+    batched fused device decode, no host-numpy decode bounce) and every
+    leaf is placed with its PARAM_RULES sharding as it decodes — the
+    serve mesh may differ arbitrarily from the training mesh. Float
+    params are cast to `dtype` (bf16 by default: serving re-reading f32
+    masters doubles parameter HBM traffic, see `serving_params_struct`).
+    Returns (params, meta) or None when no usable checkpoint exists.
+    """
+    from ..checkpoint import ckpt as C
+    restored = C.restore_checkpoint(directory, step=step, plan=plan,
+                                    cfg=ckpt_cfg)
+    if restored is None:
+        return None
+    state, meta = restored
+    params = (state["params"] if isinstance(state, dict)
+              and "params" in state else state)
+
+    def cast(leaf):
+        arr = jnp.asarray(leaf)
+        if jnp.issubdtype(arr.dtype, jnp.floating):
+            return arr.astype(dtype)
+        return arr
+
+    return jax.tree.map(cast, params), meta
+
+
 def serving_params_struct(model_cfg):
     """Serving holds params in bf16: re-reading + casting f32 masters every
     decode step doubles parameter HBM traffic for nothing (found via the

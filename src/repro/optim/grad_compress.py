@@ -212,11 +212,17 @@ def snapshot_grads(grads, eb_rel: float = 1e-3,
 
 
 def restore_grad_snapshot(snapshot):
-    """Inverse of snapshot_grads (flat dict of arrays)."""
-    from ..core import CEAZ, CEAZCompressed
-    comp = CEAZ()
-    return {k: (comp.decompress(v) if isinstance(v, CEAZCompressed) else v)
-            for k, v in snapshot.items()}
+    """Inverse of snapshot_grads (flat dict of arrays). All compressed
+    leaves decode through ONE batched fused device pass
+    (`CEAZ.decompress_batch` routes ineligible leaves to the staged
+    host path itself)."""
+    from ..core import CEAZ, CEAZCompressed, CEAZConfig
+    comp = CEAZ(CEAZConfig(use_fused=True))
+    keys = [k for k, v in snapshot.items()
+            if isinstance(v, CEAZCompressed)]
+    dec = dict(zip(keys, comp.decompress_batch([snapshot[k]
+                                                for k in keys])))
+    return {k: dec.get(k, v) for k, v in snapshot.items()}
 
 
 def snapshot_grads_to_stream(path: str, grads, eb_rel: float = 1e-3,
@@ -238,7 +244,8 @@ def snapshot_grads_to_stream(path: str, grads, eb_rel: float = 1e-3,
 
     eng = E.AsyncCompressWriteEngine(
         path, encode, sync=not overlap,
-        meta={"kind": "grad_snapshot", "eb_rel": eb_rel})
+        meta={"kind": "grad_snapshot", "eb_rel": eb_rel},
+        block_size=comp.cfg.block_size)
     with eng:
         for p, leaf in jax.tree_util.tree_flatten_with_path(grads)[0]:
             arr = np.asarray(leaf)
@@ -249,16 +256,14 @@ def snapshot_grads_to_stream(path: str, grads, eb_rel: float = 1e-3,
     return eng.stats.as_dict()
 
 
-def restore_grad_snapshot_stream(path: str):
+def restore_grad_snapshot_stream(path: str, group: int = 8):
     """Read a streamed snapshot back as {path: np.ndarray}, validating
-    the stream index and checksums."""
-    from ..core import CEAZ, CEAZCompressed
+    the stream index and checksums. Records ride the engine's read
+    pipeline: the prefetch thread reads+deserializes leaf i+1 while a
+    group of leaves decodes as one batched fused device pass — no
+    host-numpy decode bounce."""
+    from ..core import CEAZ, CEAZConfig
     from ..io import engine as E
-    comp = CEAZ()
-    out = {}
-    with E.StreamReader(path) as r:
-        for rec, obj in r.iter_objects():
-            if isinstance(obj, CEAZCompressed):
-                obj = comp.decompress(obj)
-            out[rec["key"]] = obj
-    return out
+    comp = CEAZ(CEAZConfig(use_fused=True))
+    with E.AsyncDecodeReadEngine(path, comp, group=group) as eng:
+        return {rec["key"]: obj for rec, obj in eng}

@@ -1,0 +1,304 @@
+"""Device-resident fused CEAZ decode pipeline (the read-side of Fig 4).
+
+``runtime.fused`` keeps the whole compression pipeline on device; this
+module is its symmetric inverse. The staged reference decompressor
+(``core.ceaz.CEAZ.decompress``) walks chunks in a host python loop and
+runs the canonical-Huffman table decode in numpy, one chunk at a time —
+exactly the chunk-sequential host bounce cuSZ/FZ-GPU show the read path
+cannot afford. Here the three per-value stages run as jit-compiled
+batched passes:
+
+  pass 1  — canonical-Huffman table decode of EVERY chunk in the batch
+            (across arrays: the batch dimension is the union of all
+            chunks of all arrays in the group). Each chunk decodes its
+            blocks in parallel lanes — the multi-pipeline FPGA decoder
+            with (n_chunks x n_blocks) lanes instead of n_blocks.
+  pass 2  — outlier scatter (code 0 escapes -> stored deltas) and the
+            inverse dual-quant (multi-axis inclusive cumsum) per array,
+            codes staying device-resident between the passes.
+  host    — ONLY the final scale multiply (the staged reference computes
+            it through float64, which jax does not carry by default) and
+            the literal patch: one vectorized elementwise op each, at
+            memory bandwidth. Everything bit-width-heavy (table walk,
+            scatter, prefix sums) never touches host numpy.
+
+Bit-exactness contract: for float32 Lorenzo streams the output is
+BIT-IDENTICAL to the staged reference in every mode (abs/rel/
+fixed_ratio) — enforced by tests/test_fused_decode.py. The device walk
+reproduces the staged decoder's integer state exactly (same tables, same
+cursor arithmetic on the u32 reinterpretation of the u64 wire words);
+the host multiply then replays the staged float64 formula on the exact
+integer field.
+
+Scope mirrors the fused encoder: float32 Lorenzo streams. Float64 (int64
+reconstruction headroom) and value-direct (predictor='none') streams
+fall back to the staged host path inside the ``CEAZ.decompress_batch``
+facade — callers never need their own eligibility split.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import dualquant as core_dq
+from ..core.huffman import DEFAULT_MAX_LEN, Codebook, replay_codebooks
+
+MAX_CODE_BITS = DEFAULT_MAX_LEN
+_TBL = 1 << MAX_CODE_BITS
+
+
+# ---------------------------------------------------------------------------
+# Pass 1: batched block-parallel canonical-Huffman table decode
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def _decode_pass(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                 block_size):
+    """All chunks -> symbol codes, in one traced computation.
+
+    words2   (C, W)  uint32 — wire bitstream, u64 words split MSB-first
+    nbits2   (C, NB) int32  — per-block bit counts (zero-padded)
+    counts   (C,)    int32  — valid symbols per chunk
+    sym/len_flat (K*2^16,)  — stacked decode tables, one row per unique
+                              codebook; cb_idx (C,) selects the row.
+
+    The walk is sequential IN-BLOCK (a prefix code must be) but every
+    (chunk, block) lane advances in lock-step — the python-level loop of
+    the staged decoder becomes one fori_loop over in-block position with
+    C*NB-wide vector steps.
+    """
+    C, NB = nbits2.shape
+    ends = jnp.cumsum(nbits2, axis=1)
+    starts = jnp.concatenate(
+        [jnp.zeros((C, 1), jnp.int32), ends[:, :-1].astype(jnp.int32)],
+        axis=1)
+    counts_b = jnp.clip(
+        counts[:, None] - jnp.arange(NB, dtype=jnp.int32)[None, :]
+        * block_size, 0, block_size)
+    cb_off = cb_idx.astype(jnp.int32)[:, None] * _TBL      # (C, 1)
+
+    def body(i, state):
+        cursors, out = state
+        w = cursors >> 5
+        b = (cursors & 31).astype(jnp.uint32)
+        x0 = jnp.take_along_axis(words2, w, axis=1)
+        x1 = jnp.take_along_axis(words2, w + 1, axis=1)
+        win = (x0 << b) | jnp.where(
+            b > 0, x1 >> (jnp.uint32(32) - jnp.maximum(b, jnp.uint32(1))),
+            jnp.uint32(0))
+        pk = (win >> jnp.uint32(32 - MAX_CODE_BITS)).astype(jnp.int32)
+        sym = sym_flat[cb_off + pk]
+        ln = len_flat[cb_off + pk].astype(jnp.int32)
+        active = counts_b > i
+        out = out.at[i].set(jnp.where(active, sym, jnp.uint16(0)))
+        cursors = cursors + jnp.where(active, ln, 0)
+        return cursors, out
+
+    out0 = jnp.zeros((block_size, C, NB), jnp.uint16)
+    _, out = jax.lax.fori_loop(0, block_size, body, (starts, out0))
+    # (pos, C, NB) -> (C, NB, pos): symbol s of block b sits at b*bs + s
+    return out.transpose(1, 2, 0).reshape(C, NB * block_size)
+
+
+# ---------------------------------------------------------------------------
+# Pass 2: outlier scatter + inverse dual-quant (device-resident)
+# ---------------------------------------------------------------------------
+
+def _scatter_outliers(codes2, oidx2, odelta2):
+    """codes -> deltas with the escape symbols replaced by their stored
+    values. Padding entries carry an out-of-range index (mode='drop')."""
+    delta2 = codes2.astype(jnp.int32) - core_dq.RADIUS
+    cidx = jnp.broadcast_to(
+        jnp.arange(delta2.shape[0], dtype=jnp.int32)[:, None], oidx2.shape)
+    return delta2.at[cidx, oidx2].set(odelta2, mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("ndim", "n", "work_shape"))
+def _inverse_nd(codes2, oidx2, odelta2, ndim, n, work_shape):
+    """abs/rel: one Lorenzo field cut into chunks -> flat integer q.
+
+    The cumsum crosses chunk boundaries exactly as the encoder's single
+    whole-array quantization pass did.
+    """
+    delta2 = _scatter_outliers(codes2, oidx2, odelta2)
+    delta = delta2.reshape(-1)[:n].reshape(work_shape)
+    q = delta
+    for ax in range(ndim):
+        q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
+    return q.reshape(-1)
+
+
+@jax.jit
+def _inverse_1d_chunks(codes2, oidx2, odelta2):
+    """fixed_ratio: every chunk is an independent 1-D stream."""
+    delta2 = _scatter_outliers(codes2, oidx2, odelta2)
+    return jnp.cumsum(delta2, axis=1, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Host assembly
+# ---------------------------------------------------------------------------
+
+def _u64_to_u32(w64: np.ndarray) -> np.ndarray:
+    """Split the u64 wire words into the device's MSB-first u32 pairs."""
+    out = np.empty(2 * len(w64), np.uint32)
+    out[0::2] = (w64 >> np.uint64(32)).astype(np.uint32)
+    out[1::2] = (w64 & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return out
+
+
+def _bucket_pow2(n: int, floor: int = 1) -> int:
+    b = max(floor, 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def _bucket_words(n: int) -> int:
+    """u32 capacity buckets: powers of two up to a page, then pages."""
+    if n <= 4096:
+        return _bucket_pow2(n, 4)
+    return -(-n // 4096) * 4096
+
+
+def fused_decode_ok(c, offline: Codebook) -> bool:
+    """Scope mirrors the fused encoder: float32 Lorenzo streams whose
+    codebooks pack at the standard length limit."""
+    return (getattr(c, "predictor", "lorenzo") == "lorenzo"
+            and np.dtype(c.dtype) == np.float32
+            and c.mode in ("abs", "rel", "fixed_ratio")
+            and len(c.chunks) > 0
+            and offline.max_len == MAX_CODE_BITS)
+
+
+class _ChunkBatch:
+    """Host staging of one group's chunks for the batched decode pass."""
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self.words: List[np.ndarray] = []          # u32 per chunk
+        self.nbits: List[np.ndarray] = []
+        self.counts: List[int] = []
+        self.books: List[Codebook] = []
+        self.spans: List[Tuple[int, int]] = []     # comp -> row range
+
+    def add_comp(self, c, offline: Codebook):
+        row0 = len(self.counts)
+        for ch, book in zip(c.chunks, replay_codebooks(c.chunks, offline)):
+            self.words.append(_u64_to_u32(ch.words))
+            self.nbits.append(np.asarray(ch.block_nbits, np.int64))
+            self.counts.append(int(ch.n_values))
+            self.books.append(book)
+        self.spans.append((row0, len(self.counts)))
+
+    def run(self):
+        """-> device codes (C_cap, NB_cap*block_size) uint16 (padded)."""
+        C = len(self.counts)
+        c_cap = _bucket_pow2(C)
+        nb_cap = _bucket_pow2(max(len(b) for b in self.nbits))
+        w_need = max(len(w) for w in self.words) + 2
+        w_cap = _bucket_words(w_need)
+        words2 = np.zeros((c_cap, w_cap), np.uint32)
+        nbits2 = np.zeros((c_cap, nb_cap), np.int32)
+        counts = np.zeros(c_cap, np.int32)
+        for i, (w, nb) in enumerate(zip(self.words, self.nbits)):
+            words2[i, :len(w)] = w
+            nbits2[i, :len(nb)] = nb
+            counts[i] = self.counts[i]
+        # unique codebooks -> stacked decode tables + per-chunk row index
+        uniq: Dict[str, int] = {}
+        tables_sym, tables_len = [], []
+        cb_idx = np.zeros(c_cap, np.int32)
+        for i, book in enumerate(self.books):
+            k = uniq.get(book.id)
+            if k is None:
+                k = uniq[book.id] = len(tables_sym)
+                sym, ln = book.tables()
+                tables_sym.append(sym)
+                tables_len.append(ln)
+            cb_idx[i] = k
+        k_cap = _bucket_pow2(len(tables_sym))
+        while len(tables_sym) < k_cap:
+            tables_sym.append(np.zeros(_TBL, np.uint16))
+            tables_len.append(np.zeros(_TBL, np.uint8))
+        sym_flat = np.concatenate(tables_sym)
+        len_flat = np.concatenate(tables_len)
+        return _decode_pass(jnp.asarray(words2), jnp.asarray(nbits2),
+                            jnp.asarray(counts), jnp.asarray(sym_flat),
+                            jnp.asarray(len_flat), jnp.asarray(cb_idx),
+                            self.block_size)
+
+
+def _padded_outliers(chunks) -> Tuple[np.ndarray, np.ndarray]:
+    """(C, K) outlier index/delta arrays; padding indices point one past
+    the chunk so the device scatter drops them."""
+    k = max(1, max(len(ch.outlier_idx) for ch in chunks))
+    oidx = np.full((len(chunks), k), 1 << 30, np.int32)
+    odelta = np.zeros((len(chunks), k), np.int32)
+    for i, ch in enumerate(chunks):
+        m = len(ch.outlier_idx)
+        oidx[i, :m] = ch.outlier_idx.astype(np.int32)
+        odelta[i, :m] = ch.outlier_delta.astype(np.int32)
+    return oidx, odelta
+
+
+def _finish_host(c, q: np.ndarray, eb_per_value: np.ndarray) -> np.ndarray:
+    """The staged float64 formula + literal patch — the ONLY host math."""
+    out_dtype = np.dtype(c.dtype)
+    rec = (q.astype(np.float64) * eb_per_value).astype(out_dtype)
+    rec[c.literal_idx] = c.literal_val.astype(out_dtype)
+    return rec.reshape(c.shape)
+
+
+def _work_shape(c) -> tuple:
+    if len(c.shape) <= 3:
+        return tuple(int(s) for s in c.shape)
+    tail = tuple(int(s) for s in c.shape[-2:])
+    lead = int(np.prod(c.shape[:-2]))
+    return (lead,) + tail
+
+
+def decompress_one(codes_rows, c) -> np.ndarray:
+    """Pass 2 + host finish for one array, given its decoded chunk rows
+    (device-resident, possibly wider than the array's chunk_values)."""
+    cv = int(c.chunks[0].n_values)
+    n = int(c.n_values)
+    oidx, odelta = _padded_outliers(c.chunks)
+    rows = codes_rows[:, :cv]
+    if c.mode in ("abs", "rel"):
+        q = np.asarray(_inverse_nd(rows, jnp.asarray(oidx),
+                                   jnp.asarray(odelta), c.ndim, n,
+                                   _work_shape(c)))
+        return _finish_host(c, q, np.float64(2.0 * c.chunks[0].eb))
+    # fixed_ratio: independent chunks, per-chunk eb
+    q2 = np.asarray(_inverse_1d_chunks(rows, jnp.asarray(oidx),
+                                       jnp.asarray(odelta)))
+    parts = [q2[i, :ch.n_values] for i, ch in enumerate(c.chunks)]
+    ebs = np.repeat([2.0 * ch.eb for ch in c.chunks],
+                    [ch.n_values for ch in c.chunks])
+    return _finish_host(c, np.concatenate(parts), ebs)
+
+
+def decompress_batch(comps: Sequence, block_size: int,
+                     offline: Codebook) -> List[np.ndarray]:
+    """Fused decode of a group of CEAZCompressed streams.
+
+    All chunks of all arrays share ONE batched Huffman-decode pass;
+    the inverse-quant pass then runs per array (its cumsum rank and
+    shape are array-specific). Callers must pre-filter eligibility with
+    ``fused_decode_ok`` — the ``CEAZ.decompress_batch`` facade does.
+    """
+    batch = _ChunkBatch(block_size)
+    for c in comps:
+        batch.add_comp(c, offline)
+    if not batch.counts:
+        return []
+    codes_all = batch.run()
+    out = []
+    for c, (r0, r1) in zip(comps, batch.spans):
+        out.append(decompress_one(codes_all[r0:r1], c))
+    return out

@@ -217,27 +217,34 @@ def spec_for_path(path: str, ndim: int, attn_part: str = "heads") -> P:
     return P(*([None] * ndim))
 
 
+def leaf_sharding(path: str, shape, plan: ShardingPlan):
+    """NamedSharding for ONE leaf by PARAM_RULES path match, or None when
+    the plan has no mesh. Needs only the flat key path and shape, so a
+    streaming restore can place each leaf as it decodes — before the full
+    tree exists."""
+    if plan.mesh is None:
+        return None
+    shape = tuple(shape)
+    spec = spec_for_path(path, len(shape), plan.attn_part)
+    # divisibility guard: pjit argument shardings must divide evenly
+    # (e.g. GQA kv-heads=2 cannot shard over a 16-way model axis) —
+    # non-divisible dims fall back to replication.
+    parts = []
+    for i, p in enumerate(spec):
+        if p is None:
+            parts.append(None)
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        size = int(np.prod([plan.mesh.shape[a] for a in axes]))
+        parts.append(p if shape[i] % size == 0 else None)
+    return NamedSharding(plan.mesh, P(*parts))
+
+
 def param_shardings(params, plan: ShardingPlan):
     """Pytree of NamedShardings matching `params` via PARAM_RULES."""
     if plan.mesh is None:
         return jax.tree.map(lambda _: None, params)
-
-    def to_sharding(path, leaf):
-        keys = compat.keystr(path)
-        shape = getattr(leaf, "shape", ())
-        ndim = len(shape) if hasattr(leaf, "shape") else np.ndim(leaf)
-        spec = spec_for_path(keys, ndim, plan.attn_part)
-        # divisibility guard: pjit argument shardings must divide evenly
-        # (e.g. GQA kv-heads=2 cannot shard over a 16-way model axis) —
-        # non-divisible dims fall back to replication.
-        parts = []
-        for i, p in enumerate(spec):
-            if p is None:
-                parts.append(None)
-                continue
-            axes = p if isinstance(p, tuple) else (p,)
-            size = int(np.prod([plan.mesh.shape[a] for a in axes]))
-            parts.append(p if shape[i] % size == 0 else None)
-        return NamedSharding(plan.mesh, P(*parts))
-
-    return jax.tree_util.tree_map_with_path(to_sharding, params)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: leaf_sharding(compat.keystr(path),
+                                         getattr(leaf, "shape", ()), plan),
+        params)

@@ -198,7 +198,139 @@ def test_backpressure_bounds_inflight(tmp_path):
     assert len(E.StreamReader(str(tmp_path / "bp.ceazs"))) == 16
 
 
+# -- read side: prefetch -> device-decode pipeline ---------------------------
+
+def test_read_pipeline_matches_sync(tmp_path, shards):
+    """Prefetch + batched fused decode must yield the same records, in
+    commit order, as the inline sync read."""
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    a = E.read_stream_arrays(path)
+    b = E.read_stream_arrays(path, sync=True)
+    assert len(a) == len(b) == len(shards)
+    for x, y, s in zip(a, b, shards):
+        assert np.array_equal(x, y)
+        assert np.abs(x - s).max() <= 1e-4 * (s.max() - s.min())
+
+
+def test_read_pipeline_group_invariance(tmp_path, shards):
+    """The decode-batch grain must not change any decoded value."""
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    for g in (1, 3, 16):
+        for x, y in zip(E.read_stream_arrays(path, group=g),
+                        E.read_stream_arrays(path, group=2)):
+            assert np.array_equal(x, y)
+
+
+def test_read_pipeline_stats(tmp_path, shards):
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    with E.AsyncDecodeReadEngine(path) as eng:
+        assert len(eng) == len(shards)
+        out = eng.objects()
+    assert len(out) == len(shards)
+    st = eng.stats
+    assert st.n_records == len(shards)
+    assert st.raw_bytes == sum(s.nbytes for s in shards)
+    assert st.stored_bytes < st.raw_bytes
+    assert st.wall_s > 0 and st.read_s > 0 and st.decode_s > 0
+
+
+def test_read_pipeline_surfaces_corruption(tmp_path, shards):
+    """Payload corruption must propagate out of the prefetch thread as
+    StreamCorruptionError on the consuming side — never silent garbage."""
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    r = E.StreamReader(path)
+    off = r.records[2]["offset"] + E.RECORD_HEADER.size + 5
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    data[off] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(E.StreamCorruptionError, match="checksum"):
+        E.read_stream_arrays(path)
+
+
+def test_read_seq_random_access(tmp_path, shards):
+    """Satellite: the footer index gives O(1) record access — restore
+    can fetch one leaf without scanning the stream."""
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    from repro.core import CEAZ
+    comp = CEAZ(CEAZConfig(use_fused=True))
+    with E.StreamReader(path) as r:
+        obj = r.read_seq(2)                       # one seek+read
+        rec = comp.decompress(obj)
+        assert np.abs(rec - shards[2]).max() \
+            <= 1e-4 * (shards[2].max() - shards[2].min())
+        assert r.seq_of(r.records[1]["key"]) == 1
+        by_key = r.read_key(r.records[1]["key"])
+        assert np.array_equal(comp.decompress(by_key),
+                              comp.decompress(r.read_seq(1)))
+        with pytest.raises(IndexError):
+            r.read_seq(len(shards))
+        with pytest.raises(KeyError):
+            r.seq_of("no_such_key")
+
+
+def test_read_engine_abandoned_close_is_prompt(tmp_path, shards):
+    """Closing without draining must not stall: the prefetch thread's
+    sentinel put backs off when the consumer goes away."""
+    import time
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    eng = E.AsyncDecodeReadEngine(path, group=1, max_inflight=1)
+    time.sleep(0.2)                 # let the prefetcher fill the queue
+    t0 = time.perf_counter()
+    eng.close()                     # nothing consumed
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_read_engine_is_one_shot(tmp_path, shards):
+    """Re-iterating a drained engine must fail loudly, not hang on the
+    empty queue."""
+    path = str(tmp_path / "s.ceazs")
+    _write(path, shards)
+    with E.AsyncDecodeReadEngine(path) as eng:
+        assert len(eng.objects()) == len(shards)
+        with pytest.raises(RuntimeError, match="one-shot"):
+            list(eng)
+
+
+def test_stream_records_block_size_and_reader_uses_it(tmp_path, shards):
+    """Decode needs the encoder's block grain: the writer records it in
+    the footer meta, the default reader picks it up, and a forced
+    mismatch raises instead of silently decoding garbage."""
+    path = str(tmp_path / "bs.ceazs")
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           block_size=1024))
+    E.write_stream(path, shards, comp, fsync=False)
+    with E.StreamReader(path) as r:
+        assert r.meta["block_size"] == 1024
+    back = E.read_stream_arrays(path)           # self-configured reader
+    for a, b in zip(back, shards):
+        assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+    bad = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                          block_size=4096))
+    with pytest.raises(ValueError, match="block_size"):
+        E.read_stream_arrays(path, bad)
+
+
 # -- consumers ---------------------------------------------------------------
+
+def test_parallel_read_self_configures_block_size(tmp_path, shards):
+    """A dump written with a non-default block grain reads back through
+    the default parallel_read: the footer meta carries the grain."""
+    from repro.io.filewrite import parallel_compressed_write, parallel_read
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           block_size=1024))
+    parallel_compressed_write(str(tmp_path), shards, comp=comp,
+                              fsync=False)
+    back = parallel_read(str(tmp_path))
+    for a, b in zip(back, shards):
+        assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+
 
 def test_gather_stream_round_trip(tmp_path):
     from repro.io.collectives import ceaz_gather_stream

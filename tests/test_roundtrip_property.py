@@ -1,0 +1,88 @@
+"""Property-based round-trip: compress -> decompress honors the error
+bound, and the fused decode is bit-exact vs the staged reference —
+across modes (abs/rel/fixed_ratio), dtypes (f32/f64), predictors
+(lorenzo/none), for both staged and fused compression paths."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the 'test' extra")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import CEAZ, CEAZConfig, default_offline_codebook  # noqa: E402
+
+OFFLINE = default_offline_codebook()
+
+# fixed shape menu bounds the number of jit variants the suite compiles
+SHAPES = [(611,), (96, 67), (9, 24, 31)]
+
+
+def _arrays(draw):
+    shape = draw(st.sampled_from(SHAPES))
+    n = int(np.prod(shape))
+    kind = draw(st.sampled_from(["smooth", "noise", "const", "mixed"]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if kind == "smooth":
+        x = np.cumsum(rng.standard_normal(n)) / 10
+    elif kind == "noise":
+        x = rng.standard_normal(n) * draw(st.sampled_from([1e-3, 1.0, 50.0]))
+    elif kind == "const":
+        x = np.full(n, draw(st.sampled_from([0.0, -3.5, 17.0])))
+    else:
+        x = np.where(rng.random(n) < 0.05, rng.standard_normal(n) * 100,
+                     np.cumsum(rng.standard_normal(n)) / 10)
+    return x.reshape(shape)
+
+
+@st.composite
+def cases(draw):
+    x = _arrays(draw)
+    dtype = draw(st.sampled_from([np.float32, np.float64]))
+    mode = draw(st.sampled_from(["abs", "rel", "fixed_ratio"]))
+    predictor = draw(st.sampled_from(["lorenzo", "none"]))
+    kw = dict(mode=mode, predictor=predictor, chunk_bytes=1 << 12,
+              block_size=512, backend="jax")
+    if mode == "fixed_ratio":
+        kw["target_ratio"] = draw(st.sampled_from([6.0, 10.0]))
+    else:
+        kw["eb"] = draw(st.sampled_from([1e-2, 1e-4]))
+    return x.astype(dtype), kw
+
+
+def _abs_bound(x, cfg: CEAZConfig) -> float:
+    if cfg.mode == "abs":
+        return cfg.eb
+    vrange = float(np.max(x) - np.min(x)) or 1.0
+    # fixed_ratio adapts eb per chunk; bound by the loosest chunk below
+    return cfg.eb * vrange if cfg.mode == "rel" else float("inf")
+
+
+@given(cases())
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_bound_and_fused_parity(case):
+    x, kw = case
+    staged = CEAZ(CEAZConfig(use_fused=False, **kw),
+                  offline_codebook=OFFLINE)
+    fused = CEAZ(CEAZConfig(use_fused=True, **kw),
+                 offline_codebook=OFFLINE)
+    cs, cf = staged.compress(x), fused.compress(x)
+
+    for comp, c in ((staged, cs), (fused, cf)):
+        rec = staged._decompress_staged(c)          # reference decode
+        assert rec.shape == x.shape and rec.dtype == x.dtype
+        bound = _abs_bound(x, comp.cfg)
+        if np.isfinite(bound):
+            err = np.abs(rec.astype(np.float64) - x.astype(np.float64))
+            assert err.max() <= bound
+        else:                                       # fixed_ratio per-chunk ebs
+            errs = np.abs(rec.reshape(-1).astype(np.float64)
+                          - x.reshape(-1).astype(np.float64))
+            ebs = np.repeat([ch.eb for ch in c.chunks],
+                            [ch.n_values for ch in c.chunks])
+            assert np.all(errs <= ebs)
+        # fused decode must be bit-exact vs the staged reference
+        rec_fused = fused.decompress(c)
+        assert rec_fused.dtype == rec.dtype
+        assert np.array_equal(rec_fused, rec)
