@@ -1,0 +1,143 @@
+"""Inner-loop kernel microbenchmark: jnp vs Pallas through the dispatch
+layer, with a bit-identity gate.
+
+Times the two dispatchable hot loops of the fused pipeline — the encode
+gather-pack (`hufenc`) and the canonical-table decode walk (`hufdec`) —
+for every registered implementation, on synthetic chunk batches shaped
+like what ``runtime/fused.py`` / ``runtime/fused_decode.py`` actually
+stage. Emits one JSON row per (op, impl, case) into the BENCH artifact
+trajectory (results/bench/kernel_microbench.json).
+
+Gate policy: off-TPU the Pallas kernels run under ``interpret=True``,
+which is a CORRECTNESS vehicle, not a performance one — so the CI gate
+asserts bit-identity between every implementation pair and does NOT
+compare their speed. On a real TPU backend (where 'pallas' compiles) the
+JSON rows carry the real relative numbers for the perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import huffman as H
+from repro.kernels import dispatch
+from repro.runtime.fused_decode import _u64_to_u32
+
+from .common import emit
+
+BLOCK_SIZE = 1024
+CASES = [
+    # (n_chunks, chunk_values)
+    (4, 16384),
+    (16, 16384),
+    (4, 65536),
+]
+
+
+def _chunk_batch(rng, n_chunks: int, cv: int):
+    """Synthetic encode-side staging: per-chunk codes + codebook rows."""
+    codes2 = np.clip(rng.normal(512, 40, (n_chunks, cv)), 0,
+                     1023).astype(np.int32)
+    valid2 = np.ones((n_chunks, cv), bool)
+    valid2[-1, cv - cv // 5:] = False            # ragged tail chunk
+    books = [H.Codebook.from_freqs(
+        np.bincount(codes2[i][valid2[i]], minlength=H.NUM_SYMBOLS))
+        for i in range(n_chunks)]
+    lengths = np.stack([b.lengths for b in books]).astype(np.int32)
+    cwords = np.stack([b.codes for b in books]).astype(np.uint32)
+    bits = [int(lengths[i][codes2[i][valid2[i]]].sum())
+            for i in range(n_chunks)]
+    w32 = 2 * ((max(bits) + 63) // 64 + 1)
+    w32 = -(-w32 // 128) * 128
+    return codes2, valid2, lengths, cwords, books, w32
+
+
+def _decode_batch(codes2, valid2, books, words, nbits):
+    """Encode-side output restaged as the decode op's inputs."""
+    n_chunks = codes2.shape[0]
+    words_np = np.asarray(words)
+    nbits_np = np.asarray(nbits)
+    w_cap = words_np.shape[1] + 2
+    words2 = np.zeros((n_chunks, w_cap), np.uint32)
+    words2[:, :words_np.shape[1]] = words_np
+    counts = valid2.sum(axis=1).astype(np.int32)
+    sym_flat = np.concatenate([b.tables()[0] for b in books])
+    len_flat = np.concatenate([b.tables()[1] for b in books])
+    cb_idx = np.arange(n_chunks, dtype=np.int32)
+    return (words2, nbits_np.astype(np.int32), counts, sym_flat, len_flat,
+            cb_idx)
+
+
+def _time(fn, *args, repeats: int = 3, **kw) -> tuple:
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)                   # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def run():
+    rng = np.random.default_rng(0)
+    backend = jax.default_backend()
+    rows = []
+    mismatches = []
+    for n_chunks, cv in CASES:
+        codes2, valid2, lengths, cwords, books, w32 = _chunk_batch(
+            rng, n_chunks, cv)
+        case = f"{n_chunks}x{cv}"
+        mb = codes2.size * 4 / 1e6
+        enc_out = {}
+        for impl in dispatch.available("hufenc"):
+            fn = dispatch.resolve("hufenc", impl)
+            (words, nbits), t = _time(
+                fn, jnp.asarray(codes2), jnp.asarray(valid2),
+                jnp.asarray(lengths), jnp.asarray(cwords), BLOCK_SIZE,
+                w32, 33)
+            enc_out[impl] = (np.asarray(words), np.asarray(nbits))
+            rows.append(dict(op="hufenc", impl=impl, case=case,
+                             backend=backend, mb=mb, seconds=t,
+                             throughput_mbs=mb / t))
+        ref_w, ref_n = enc_out["jnp"]
+        for impl, (w, n) in enc_out.items():
+            if not (np.array_equal(w, ref_w) and np.array_equal(n, ref_n)):
+                mismatches.append(("hufenc", impl, case))
+
+        dec_args = _decode_batch(codes2, valid2, books, ref_w, ref_n)
+        dec_out = {}
+        for impl in dispatch.available("hufdec"):
+            fn = dispatch.resolve("hufdec", impl)
+            out, t = _time(fn, *(jnp.asarray(a) for a in dec_args),
+                           BLOCK_SIZE)
+            dec_out[impl] = np.asarray(out)
+            rows.append(dict(op="hufdec", impl=impl, case=case,
+                             backend=backend, mb=mb, seconds=t,
+                             throughput_mbs=mb / t))
+        for impl, out in dec_out.items():
+            if not np.array_equal(out, dec_out["jnp"]):
+                mismatches.append(("hufdec", impl, case))
+
+    by = {}
+    for r in rows:
+        by.setdefault((r["op"], r["impl"]), []).append(r["throughput_mbs"])
+    summary = {f"{op}_{impl}_mbs": float(np.median(v))
+               for (op, impl), v in by.items()}
+    rows.append(dict(kind="summary", backend=backend,
+                     auto_hufenc=dispatch.auto_impl("hufenc"),
+                     auto_hufdec=dispatch.auto_impl("hufdec"),
+                     bit_identical=not mismatches, **summary))
+    emit("kernel_microbench", rows,
+         derived=";".join(f"{k}={v:.0f}" for k, v in summary.items())
+         + f";bit_identical={not mismatches}")
+    assert not mismatches, f"kernel impl mismatches: {mismatches}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""Doctest-checked API walkthrough: facade, kernel dispatch, streams.
+
+This file is executable documentation — CI's docs lane runs it with
+``python -m doctest examples/api_walkthrough.py`` (with ``src`` on
+PYTHONPATH), so every snippet below is guaranteed to stay in sync with
+the code. The prose versions of these flows live in the README and
+docs/ARCHITECTURE.md.
+
+Compress / decompress through the facade
+----------------------------------------
+
+The facade routes per input: eligible float32 Lorenzo work takes the
+fused device pipeline, everything else the host-staged reference — the
+bits are identical either way.
+
+>>> import numpy as np
+>>> from repro.core import CEAZ, CEAZConfig
+>>> x = np.fromfunction(lambda i, j: np.sin(i / 40) + j / 200,
+...                     (200, 300)).astype(np.float32)
+>>> comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+...                        chunk_bytes=1 << 16, block_size=1024))
+>>> c = comp.compress(x)
+>>> (c.dtype, c.mode, c.shape)
+('float32', 'rel', (200, 300))
+>>> rec = comp.decompress(c)
+>>> bool(np.abs(rec - x).max() <= 1e-4 * (x.max() - x.min()))
+True
+>>> c.ratio() > 5.0
+True
+
+Batched compression shares one fused device pass; ineligible inputs
+(here a float64 array) transparently fall back per shard:
+
+>>> outs = comp.compress_batch([x, x + 1.0, x.astype(np.float64)])
+>>> [o.dtype for o in outs]
+['float32', 'float32', 'float64']
+
+Kernel dispatch
+---------------
+
+The fused pipeline's two inner loops resolve through a registry keyed
+on (op, implementation); ``kernel_impl='pallas'`` forces the Pallas
+kernels (interpreted off-TPU) and is bit-identical to the default:
+
+>>> pal = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+...                       chunk_bytes=1 << 16, block_size=1024,
+...                       kernel_impl="pallas"))
+>>> cp = pal.compress(x)
+>>> all(np.array_equal(a.words, b.words)
+...     for a, b in zip(c.chunks, cp.chunks))
+True
+>>> bad = CEAZ(CEAZConfig(use_fused=True, kernel_impl="typo"))
+>>> bad.compress(x)
+Traceback (most recent call last):
+    ...
+ValueError: unknown kernel_impl 'typo' for op 'hufenc'; choose from ('auto', 'jnp', 'pallas')
+
+Decoding needs the encoder's block grain — a mismatch refuses loudly
+instead of decoding checksum-clean garbage:
+
+>>> import dataclasses
+>>> wrong = CEAZ(dataclasses.replace(comp.cfg, block_size=4096))
+>>> wrong.decompress(c)  # doctest: +IGNORE_EXCEPTION_DETAIL
+Traceback (most recent call last):
+    ...
+ValueError: decode block_size=4096 inconsistent with stream: ...
+
+Streams
+-------
+
+``write_stream`` overlaps fused compression with the ordered commit;
+the stream records its block grain, so the default reader
+self-configures (docs/STREAM_FORMAT.md is the format's normative
+spec). Corruption never comes back as data:
+
+>>> import os, tempfile
+>>> from repro.io import engine as E
+>>> d = tempfile.mkdtemp()
+>>> path = os.path.join(d, "demo.ceazs")
+>>> stats = E.write_stream(path, [x, x + 1.0], comp, fsync=False)
+>>> stats.n_records
+2
+>>> with E.StreamReader(path) as r:
+...     (len(r), r.meta["block_size"], r.records[0]["key"])
+(2, 1024, 'shard_00000')
+>>> back = E.read_stream_arrays(path)
+>>> eb_abs = 1e-4 * float(x.max() - x.min())       # rel bound per shard
+>>> bool(np.abs(back[1] - (x + 1.0)).max() <= eb_abs)
+True
+>>> blob = bytearray(open(path, "rb").read())
+>>> blob[40] ^= 0xFF                       # flip a payload bit
+>>> _ = open(path, "wb").write(bytes(blob))
+>>> try:
+...     E.read_stream_arrays(path)
+... except E.StreamCorruptionError as e:
+...     print("refused:", "checksum mismatch" in str(e))
+refused: True
+>>> import shutil
+>>> shutil.rmtree(d)
+"""
+
+if __name__ == "__main__":
+    import doctest
+    import sys
+
+    failures, _ = doctest.testmod(verbose="-v" in sys.argv)
+    sys.exit(1 if failures else 0)

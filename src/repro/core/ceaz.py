@@ -103,6 +103,21 @@ class CEAZCompressed:
 
 @dataclasses.dataclass
 class CEAZConfig:
+    """Compression policy for the :class:`CEAZ` facade.
+
+    The two switches that matter most in practice:
+
+    * ``use_fused`` — route eligible work through the device-resident
+      fused pipeline (``runtime/fused.py`` / ``runtime/fused_decode.py``)
+      instead of the host-staged reference. Both paths are bit-identical
+      for the streams the fused path covers (float32 + Lorenzo).
+    * ``kernel_impl`` — which implementation of the fused pipeline's two
+      inner loops (encode gather-pack, decode table walk) to resolve
+      from the kernel-dispatch registry (``kernels/dispatch.py``).
+
+    See ``docs/ARCHITECTURE.md`` for the full dtype x predictor x mode
+    fallback matrix.
+    """
     mode: str = "rel"                 # 'abs' | 'rel' | 'fixed_ratio'
     eb: float = 1e-4                  # absolute or range-relative bound
     target_ratio: float = 10.0        # fixed-ratio mode
@@ -123,9 +138,31 @@ class CEAZConfig:
     # and value-direct inputs fall back to the staged path below, which
     # also remains the bit-exactness reference (see tests/test_fused.py).
     use_fused: bool = False
+    # Inner-loop implementation for the fused pipeline's two hot loops,
+    # resolved through kernels/dispatch.py: 'jnp' (XLA-compiled
+    # jax.numpy), 'pallas' (explicit kernels; interpret=True off-TPU) or
+    # 'auto' (per-backend table: jnp on cpu/gpu, pallas on tpu). An
+    # unknown name raises ValueError at first compress/decompress.
+    kernel_impl: str = "auto"
 
 
 class CEAZ:
+    """The compressor facade: policy + eligibility routing.
+
+    All compression/decompression enters through this class; the facade
+    decides per array/stream whether the device-resident fused pipeline
+    or the host-staged reference runs (see the fallback matrix in
+    ``docs/ARCHITECTURE.md``) — callers never pre-split their inputs.
+
+    Construct from a :class:`CEAZConfig` (keyword overrides are applied
+    with ``dataclasses.replace``), optionally with a shared offline
+    :class:`~repro.core.huffman.Codebook` (the adaptive policy's reset
+    target; a default is built when omitted):
+
+        comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+        comp = CEAZ(mode="abs", eb=1e-3)          # kwargs-only form
+    """
+
     def __init__(self, config: CEAZConfig | None = None,
                  offline_codebook: Codebook | None = None, **kw):
         if config is None:
@@ -194,6 +231,27 @@ class CEAZ:
         return "lorenzo" if cost_l <= cost_v else "none"
 
     def compress(self, x: np.ndarray) -> CEAZCompressed:
+        """Compress one array under this facade's policy.
+
+        Args:
+          x: float32 or float64 array, any shape (Lorenzo prediction
+            uses up to rank 3; higher ranks fold leading axes).
+
+        Returns a :class:`CEAZCompressed` carrying the packed chunk
+        payloads, the outlier/literal escape channels and everything a
+        decoder needs except the block grain (``cfg.block_size`` —
+        recorded in stream footers by the I/O layer).
+
+        Routing: with ``cfg.use_fused``, float32 Lorenzo inputs run the
+        fused device pipeline; float64 and value-direct inputs (an
+        explicit ``predictor='none'`` or an ``'auto'`` probe choosing
+        it) transparently take the host-staged path. Output bits do not
+        depend on the path taken.
+
+        Raises:
+          TypeError: non-float dtype.
+          ValueError: unknown ``cfg.mode`` or ``cfg.kernel_impl``.
+        """
         x = np.asarray(x)
         if x.dtype not in (np.float32, np.float64):
             raise TypeError(f"CEAZ compresses float data, got {x.dtype}")
@@ -226,11 +284,19 @@ class CEAZ:
     def compress_batch(self, shards, plan=None) -> List[CEAZCompressed]:
         """Compress a sequence of shards under this facade's policy.
 
-        Homogeneous float32 Lorenzo shards run as ONE batched fused
-        device pass (mesh-sharded when `plan` carries a mesh); anything
-        else — float64, predictor='none'/'auto', ragged shapes,
-        use_fused off — transparently takes per-shard `compress`, which
-        itself routes ineligible inputs to the host-staged path.
+        Args:
+          shards: sequence of arrays. Homogeneous float32 Lorenzo
+            shards (same shape, error-bounded mode) run as ONE batched
+            fused device pass; anything else — float64,
+            predictor='none'/'auto', ragged shapes, ``use_fused`` off —
+            transparently takes per-shard :meth:`compress`, which
+            itself routes ineligible inputs to the host-staged path.
+          plan: optional ``ShardingPlan``; when it carries a mesh the
+            batched pass is GSPMD-sharded over its batch axes.
+
+        Returns one :class:`CEAZCompressed` per shard, in order; each
+        shard keeps its own adaptive-coder stream, so batching never
+        changes the bytes. Raises as :meth:`compress`.
         """
         shards = [np.asarray(s) for s in shards]
         if not self._batch_fused_ok(shards):
@@ -240,7 +306,8 @@ class CEAZ:
             shards, self.cfg.eb, self._chunk_values(32),
             self.cfg.block_size, offline=self.offline, plan=plan,
             mode=self.cfg.mode, tau0=self.cfg.tau0, tau1=self.cfg.tau1,
-            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build)
+            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build,
+            kernel_impl=self.cfg.kernel_impl)
 
     def _coder(self) -> AdaptiveCoder:
         return AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
@@ -256,7 +323,8 @@ class CEAZ:
         return fused.compress_error_bounded(
             x, self._abs_eb(x), self.cfg.mode, self._coder(),
             self._chunk_values(32), self.cfg.block_size,
-            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build)
+            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build,
+            kernel_impl=self.cfg.kernel_impl)
 
     def _compress_eb_direct(self, x: np.ndarray,
                             word_bits: int) -> CEAZCompressed:
@@ -327,7 +395,8 @@ class CEAZ:
             return fused.compress_fixed_ratio(
                 x, ctrl, coder, cv, self.cfg.block_size,
                 adaptive=self.cfg.adaptive,
-                exact_build=self.cfg.exact_build)
+                exact_build=self.cfg.exact_build,
+                kernel_impl=self.cfg.kernel_impl)
         chunks, lit_idx, lit_val = [], [], []
         for s in range(0, len(flat), cv):
             e = min(s + cv, len(flat))
@@ -350,10 +419,21 @@ class CEAZ:
 
     # -- decode side -----------------------------------------------------------
     def decompress(self, c: CEAZCompressed) -> np.ndarray:
-        """Decode under this facade's policy: with ``use_fused``, eligible
-        float32 Lorenzo streams run the device-resident fused decode
-        (runtime/fused_decode.py — bit-identical to the staged reference);
-        float64 and value-direct streams take the host-staged path."""
+        """Decode one stream under this facade's policy.
+
+        With ``cfg.use_fused``, eligible float32 Lorenzo streams run
+        the device-resident fused decode (runtime/fused_decode.py —
+        bit-identical to the staged reference); float64 and
+        value-direct streams take the host-staged path. Returns the
+        reconstruction in the stream's original shape and dtype.
+
+        Raises:
+          ValueError: the stream's per-chunk block counts are
+            inconsistent with ``cfg.block_size`` (decoding with the
+            wrong block grain would pass every checksum and return
+            garbage, so the facade refuses loudly — pass the grain the
+            stream was compressed with; ``.ceazs`` footers record it).
+        """
         return self.decompress_batch([c])[0]
 
     def decompress_batch(self, comps) -> List[np.ndarray]:
@@ -363,7 +443,9 @@ class CEAZ:
         share ONE batched fused Huffman-decode pass; everything else —
         float64, value-direct, ``use_fused`` off — transparently takes
         the host-staged reference path, mirroring ``compress_batch``:
-        callers never need their own eligibility split.
+        callers never need their own eligibility split. Returns arrays
+        in input order; raises the block-grain ``ValueError`` described
+        on :meth:`decompress`.
         """
         comps = list(comps)
         out: List[Optional[np.ndarray]] = [None] * len(comps)
@@ -375,7 +457,8 @@ class CEAZ:
                 for i in fused_idx:
                     self._check_block_size(comps[i])
                 dec = FD.decompress_batch([comps[i] for i in fused_idx],
-                                          self.cfg.block_size, self.offline)
+                                          self.cfg.block_size, self.offline,
+                                          kernel_impl=self.cfg.kernel_impl)
                 for i, a in zip(fused_idx, dec):
                     out[i] = a
         return [a if a is not None else self._decompress_staged(c)

@@ -24,21 +24,14 @@ engine produces files BYTE-IDENTICAL to the synchronous reference
 (``sync=True`` runs the same stages inline) — enforced by
 tests/test_engine.py.
 
-Stream format (``.ceazs`` v1, little-endian):
+Stream format (``.ceazs`` v1, little-endian) — the NORMATIVE spec,
+including the full byte-layout diagram, index-row schema, block-grain
+meta, corruption and versioning rules, lives in
+``docs/STREAM_FORMAT.md``; this module is its reference
+implementation. In one line:
 
-    +--------------------------------------------------------------+
-    | 8B  stream magic  "CEAZS\\x01\\x00\\x00"                       |
-    +--------------------------------------------------------------+
-    | record 0:  16B header ["SHRD" | u32 seq | u64 payload_len]   |
-    |            payload bytes (pickled CEAZCompressed / npy / raw)|
-    | record 1:  ...                                  (seq order)  |
-    +--------------------------------------------------------------+
-    | footer: JSON {format, meta, records:[{seq,key,offset,nbytes, |
-    |         crc32, codec, shape, dtype, eb, mode, ...}]}         |
-    +--------------------------------------------------------------+
-    | 28B trailer [u64 footer_off | u64 footer_len |               |
-    |              u32 footer_crc32 | 8B end magic "CEAZSEND"]     |
-    +--------------------------------------------------------------+
+    magic | records ("SHRD" header + payload, seq order) | JSON footer
+    index | crc-protected 28B trailer
 
 The read side is paranoid by design — every failure mode the crash-
 safety tests exercise raises ``StreamCorruptionError`` instead of
@@ -65,6 +58,7 @@ import struct
 import tempfile
 import threading
 import time
+import warnings
 import zlib
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
@@ -139,13 +133,22 @@ def _np_dtype(name: str):
 # ---------------------------------------------------------------------------
 
 class StreamWriter:
-    """Ordered appender for one ``.ceazs`` stream.
+    """Ordered appender for one ``.ceazs`` stream (format spec:
+    docs/STREAM_FORMAT.md).
 
-    Writes to ``<path>.tmp`` and atomically renames on close, so a
-    crash mid-stream never leaves a half-file under the final name.
-    ``emulate_bps`` throttles the append to a storage bandwidth (stored
-    bytes/s) — used by the overlap benchmark to model the paper's
-    parallel-file-system ceiling identically for sync and async runs.
+    Writes to a unique temp name and atomically renames on ``close``,
+    so a crash mid-stream never leaves a half-file under the final
+    name; ``abort`` discards the temp file.
+
+    Args:
+      path: final stream path (parent directories are created).
+      meta: stream-level footer metadata. Writers of ``ceaz`` payloads
+        should include ``block_size`` (the decode block grain) — see
+        the format spec's legacy-stream rule.
+      emulate_bps: throttle the append to a storage bandwidth (stored
+        bytes/s) — used by the overlap benchmark to model the paper's
+        parallel-file-system ceiling identically for sync/async runs.
+      fsync: fsync before the atomic rename (durability vs speed).
     """
 
     def __init__(self, path: str, meta: Optional[Dict] = None,
@@ -226,13 +229,21 @@ class StreamWriter:
 # ---------------------------------------------------------------------------
 
 class StreamReader:
-    """Validating reader for a ``.ceazs`` stream.
+    """Validating reader for a ``.ceazs`` stream (format spec and the
+    full list of validation rules: docs/STREAM_FORMAT.md).
 
     The constructor validates the trailer, footer checksum and the
     structural invariants of the index (monotonic in-bounds offsets,
     dense seq numbering); ``payload(i)`` additionally checks the
     record's self-identifying header and crc32 before returning bytes.
-    Every violation raises StreamCorruptionError — no silent garbage.
+    ``read_seq``/``read_key`` give O(1) random access through the
+    footer index; ``iter_objects`` walks the stream in commit order.
+
+    Raises:
+      StreamCorruptionError: on ANY structural or checksum violation —
+        truncation, bad magic, footer corruption, unsupported format
+        version, index inconsistencies, payload corruption,
+        out-of-order commits. Never returns silent garbage.
     """
 
     def __init__(self, path: str):
@@ -424,6 +435,24 @@ class AsyncDecodeReadEngine:
     Backpressure: the queue is bounded by ``max_inflight`` groups, so a
     slow decoder stalls the file reads instead of buffering the whole
     stream in memory.
+
+    Args:
+      path: stream to read; the constructor fully validates its index.
+      comp: a :class:`~repro.core.CEAZ` facade for decoding ``ceaz``
+        records. When omitted, a fused-decode facade self-configures
+        from the stream's footer meta — including the decode block
+        grain (``block_size``); legacy footers without it fall back to
+        the config default with a warning.
+      group: records per batched fused decode pass.
+      max_inflight: backpressure bound, in groups.
+      sync: run the same stages inline (the equal-results reference).
+
+    Raises:
+      StreamCorruptionError: from the constructor (invalid index) or
+        mid-iteration (payload corruption found by the prefetcher).
+      ValueError: decode block grain inconsistent with the stream (see
+        ``CEAZ.decompress``).
+      RuntimeError: second iteration of a one-shot engine.
     """
 
     def __init__(self, path: str, comp=None, *, group: int = 8,
@@ -432,10 +461,21 @@ class AsyncDecodeReadEngine:
         self._reader = StreamReader(path)   # validates trailer/footer/index
         if comp is None:
             # decode needs the encoder's block grain; self-describing
-            # streams record it in the footer meta
-            bs = int(self._reader.meta.get("block_size", 4096))
+            # streams record it in the footer meta. Streams from writers
+            # that predate the meta (pre-PR-3) fall back to the config
+            # default — loudly, because a wrong grain on a non-default
+            # stream is caught only by the facade's block-count check.
+            bs = self._reader.meta.get("block_size")
+            if bs is None:
+                bs = CEAZConfig.block_size
+                warnings.warn(
+                    f"{path}: stream footer meta lacks 'block_size' "
+                    f"(written by a pre-block-grain writer); assuming "
+                    f"the default {bs}. Pass an explicitly configured "
+                    "`comp` if the stream was compressed with another "
+                    "grain.", stacklevel=2)
             comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
-                                   block_size=bs))
+                                   block_size=int(bs)))
         self._comp = comp
         self._group = max(1, group)
         self._sync = sync
@@ -621,6 +661,24 @@ class AsyncCompressWriteEngine:
     Backpressure: both inter-stage queues are bounded by
     ``max_inflight`` batches, so a slow storage target stalls
     compression instead of accumulating payloads in memory.
+
+    Args:
+      path: final stream path (atomic-rename discipline, see
+        :class:`StreamWriter`).
+      compress_fn: ``(keys, items) -> list[obj]``; one returned object
+        per key (a short return raises RuntimeError rather than
+        finalizing a stream with missing shards).
+      serialize_fn: ``obj -> (payload_bytes, codec_meta)``; defaults to
+        :func:`serialize_payload`.
+      block_size: decode block grain recorded in the footer meta —
+        REQUIRED (by the format spec) when ``compress_fn`` produces
+        CEAZ payloads, so default readers can self-configure.
+
+    Raises:
+      RuntimeError: on ``submit*`` after ``close``, and from
+        ``submit*``/``close`` when any pipeline stage failed (the
+        original exception chained); a failed stream is aborted — the
+        temp file is removed and nothing appears under ``path``.
     """
 
     def __init__(self, path: str,

@@ -1,17 +1,24 @@
 """Pallas TPU kernels for CEAZ's compute hot spots.
 
-Four kernels, each a subpackage with kernel.py (pl.pallas_call + explicit
-BlockSpec VMEM tiling), ops.py (jit'd public wrapper), ref.py (pure-jnp
-oracle used by the allclose test sweeps):
+Five kernel packages, each a subpackage with kernel.py (pl.pallas_call +
+explicit BlockSpec VMEM tiling), ops.py (jit'd public wrapper), ref.py
+(pure-jnp oracle used by the allclose test sweeps):
 
   dualquant  — fused prequantization + Lorenzo + postquantization
   histogram  — 1024-bin quant-code histogram (one-hot partial sums)
-  hufenc     — Huffman encode: codebook gather + in-block bit packing
+  hufenc     — Huffman encode: serial per-block packer + the fused
+               pipeline's gather-pack (contiguous wire layout)
+  hufdec     — canonical-Huffman table decode (block-parallel bit walk)
   bitpack    — fixed-width b-bit pack/unpack (fixed-ratio collective path)
 
 All kernels run under interpret=True on CPU (validation) and are written
 with TPU tiling constraints (8x128 f32 / lane-dim multiples of 128).
-"""
-from . import bitpack, dualquant, histogram, hufenc  # noqa: F401
 
-__all__ = ["bitpack", "dualquant", "histogram", "hufenc"]
+``dispatch`` is the backend-dispatch registry the fused runtime resolves
+its inner loops through: (op, impl) -> callable with an (op, backend)
+auto table, selected by ``CEAZConfig(kernel_impl=...)``.
+"""
+from . import bitpack, dispatch, dualquant, histogram, hufdec, hufenc  # noqa: F401
+
+__all__ = ["bitpack", "dispatch", "dualquant", "histogram", "hufdec",
+           "hufenc"]

@@ -1,0 +1,138 @@
+"""Backend dispatch for the CEAZ inner-loop kernels.
+
+The fused pipeline has exactly two per-value hot loops — the encode-side
+gather-pack (`hufenc`) and the decode-side canonical-table walk
+(`hufdec`). Each has interchangeable implementations with one calling
+convention and a bit-exact output contract:
+
+  * ``'jnp'``    — pure jax.numpy, XLA-compiled; the default on CPU/GPU
+    where XLA vectorizes the gathers well (and the reference the Pallas
+    sweeps compare against);
+  * ``'pallas'`` — explicit Pallas kernels (kernels/hufenc gather-pack,
+    kernels/hufdec table decode); compiled on TPU, ``interpret=True``
+    everywhere else so CI exercises the kernel path on CPU.
+
+Callers never import an implementation directly — they resolve through
+the registry:
+
+    fn = dispatch.resolve("hufenc", cfg.kernel_impl)
+
+keyed on ``(op, impl)`` with an ``(op, backend) -> impl`` auto table, so
+a future TPU/GPU-specialized variant (a Mosaic-GPU decode, a fully
+tiled TPU pack) is one ``register(...)`` call — no caller changes. The
+facade knob is ``CEAZConfig(kernel_impl='auto'|'jnp'|'pallas')``.
+
+Implementations are registered as zero-arg loaders and imported on first
+resolve: importing this module (or the facade) never pulls in the Pallas
+machinery until a pallas impl is actually selected.
+
+Op calling conventions (all array args jax-compatible):
+
+  hufenc(codes2, valid2, lengths_tbl, cwords_tbl, block_size, w32,
+         cands) -> (words (C, w32) u32, block_nbits (C, nblocks) i32)
+  hufdec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+         block_size) -> codes (C, NB*block_size) u16
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+
+KNOWN_IMPLS = ("auto", "jnp", "pallas")
+
+
+def default_interpret() -> bool:
+    """Whether a Pallas impl should run in interpreter mode on the
+    current backend: compiled on TPU, interpreted everywhere else (the
+    kernels are written against TPU tiling; CPU CI exercises them
+    through the interpreter). Shared by every */ops.py wrapper so the
+    policy cannot drift between ops."""
+    return jax.default_backend() != "tpu"
+
+_LOADERS: Dict[Tuple[str, str], Callable[[], Callable]] = {}
+_RESOLVED: Dict[Tuple[str, str], Callable] = {}
+_AUTO: Dict[Tuple[str, str], str] = {}
+
+
+def register(op: str, impl: str, loader: Callable[[], Callable],
+             *, auto_for: Tuple[str, ...] = ()) -> None:
+    """Register `loader` (zero-arg, returns the impl fn) under
+    ``(op, impl)``; `auto_for` lists backends for which ``'auto'``
+    resolves to this impl."""
+    _LOADERS[(op, impl)] = loader
+    _RESOLVED.pop((op, impl), None)
+    for backend in auto_for:
+        _AUTO[(op, backend)] = impl
+
+
+def available(op: str) -> Tuple[str, ...]:
+    """Registered implementation names for `op` (excluding 'auto')."""
+    return tuple(sorted(i for (o, i) in _LOADERS if o == op))
+
+
+def auto_impl(op: str, backend: str | None = None) -> str:
+    """The impl name ``'auto'`` resolves to for `op` on `backend`
+    (default: the current ``jax.default_backend()``)."""
+    if backend is None:
+        backend = jax.default_backend()
+    return _AUTO.get((op, backend), "jnp")
+
+
+def resolve(op: str, impl: str = "auto",
+            backend: str | None = None) -> Callable:
+    """The implementation of `op` selected by `impl`.
+
+    ``'auto'`` picks per backend (see ``auto_impl``); anything not
+    registered raises ValueError naming the valid choices — a typo'd
+    ``kernel_impl`` fails loudly instead of silently falling back.
+    """
+    if impl == "auto":
+        impl = auto_impl(op, backend)
+    key = (op, impl)
+    fn = _RESOLVED.get(key)
+    if fn is not None:
+        return fn
+    loader = _LOADERS.get(key)
+    if loader is None:
+        ops = sorted({o for (o, _) in _LOADERS})
+        if op not in ops:
+            raise ValueError(
+                f"unknown kernel op {op!r}; registered ops: {ops}")
+        raise ValueError(
+            f"unknown kernel_impl {impl!r} for op {op!r}; choose from "
+            f"{('auto',) + available(op)}")
+    fn = _RESOLVED[key] = loader()
+    return fn
+
+
+# -- default implementations -------------------------------------------------
+
+def _hufenc_jnp() -> Callable:
+    from .hufenc import ref
+    return ref.encode_pack
+
+
+def _hufenc_pallas() -> Callable:
+    from .hufenc import ops
+    return ops.encode_pack
+
+
+def _hufdec_jnp() -> Callable:
+    from .hufdec import ref
+    return ref.decode_blocks
+
+
+def _hufdec_pallas() -> Callable:
+    from .hufdec import ops
+    return ops.decode_blocks
+
+
+# auto policy: on CPU and GPU the XLA-compiled jnp path wins (a Pallas
+# kernel would run interpreted there); on TPU the explicit VMEM-resident
+# kernels are the point. GPU-specialized variants (Mosaic-GPU / Triton)
+# slot in as register("hufdec", "pallas_gpu", ..., auto_for=("gpu",)).
+register("hufenc", "jnp", _hufenc_jnp, auto_for=("cpu", "gpu"))
+register("hufenc", "pallas", _hufenc_pallas, auto_for=("tpu",))
+register("hufdec", "jnp", _hufdec_jnp, auto_for=("cpu", "gpu"))
+register("hufdec", "pallas", _hufdec_pallas, auto_for=("tpu",))

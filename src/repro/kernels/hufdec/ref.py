@@ -1,0 +1,72 @@
+"""Pure-jnp lockstep table decode: the `hufdec` op's 'jnp' implementation.
+
+This is the batched canonical-Huffman walk ``runtime/fused_decode`` ran
+inline before the dispatch layer existed (PR 3): one fori_loop over
+in-block position with (chunk x block) vector lanes, every lane carrying
+its own bit cursor. It is both the default CPU implementation (XLA
+vectorizes the gathers well) and the oracle the Pallas kernel's
+bit-identity sweeps compare against — the two share only the wire-format
+contract, not code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.huffman import DEFAULT_MAX_LEN
+
+MAX_CODE_BITS = DEFAULT_MAX_LEN      # table depth the caller stages at
+TBL = 1 << MAX_CODE_BITS
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def decode_blocks(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                  block_size):
+    """All chunks -> symbol codes, in one traced computation.
+
+    words2   (C, W)  uint32 — wire bitstream, u64 words split MSB-first
+    nbits2   (C, NB) int32  — per-block bit counts (zero-padded)
+    counts   (C,)    int32  — valid symbols per chunk
+    sym/len_flat (K*2^16,)  — stacked decode tables, one row per unique
+                              codebook; cb_idx (C,) selects the row.
+
+    Returns (C, NB*block_size) uint16: symbol s of block b at b*bs + s.
+
+    The walk is sequential IN-BLOCK (a prefix code must be) but every
+    (chunk, block) lane advances in lock-step — the python-level loop of
+    the staged decoder becomes one fori_loop over in-block position with
+    C*NB-wide vector steps.
+    """
+    C, NB = nbits2.shape
+    ends = jnp.cumsum(nbits2, axis=1)
+    starts = jnp.concatenate(
+        [jnp.zeros((C, 1), jnp.int32), ends[:, :-1].astype(jnp.int32)],
+        axis=1)
+    counts_b = jnp.clip(
+        counts[:, None] - jnp.arange(NB, dtype=jnp.int32)[None, :]
+        * block_size, 0, block_size)
+    cb_off = cb_idx.astype(jnp.int32)[:, None] * TBL           # (C, 1)
+
+    def body(i, state):
+        cursors, out = state
+        w = cursors >> 5
+        b = (cursors & 31).astype(jnp.uint32)
+        x0 = jnp.take_along_axis(words2, w, axis=1)
+        x1 = jnp.take_along_axis(words2, w + 1, axis=1)
+        win = (x0 << b) | jnp.where(
+            b > 0, x1 >> (jnp.uint32(32) - jnp.maximum(b, jnp.uint32(1))),
+            jnp.uint32(0))
+        pk = (win >> jnp.uint32(32 - MAX_CODE_BITS)).astype(jnp.int32)
+        sym = sym_flat[cb_off + pk]
+        ln = len_flat[cb_off + pk].astype(jnp.int32)
+        active = counts_b > i
+        out = out.at[i].set(jnp.where(active, sym, jnp.uint16(0)))
+        cursors = cursors + jnp.where(active, ln, 0)
+        return cursors, out
+
+    out0 = jnp.zeros((block_size, C, NB), jnp.uint16)
+    _, out = jax.lax.fori_loop(0, block_size, body, (starts, out0))
+    # (pos, C, NB) -> (C, NB, pos): symbol s of block b sits at b*bs + s
+    return out.transpose(1, 2, 0).reshape(C, NB * block_size)

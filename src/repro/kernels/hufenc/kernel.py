@@ -67,6 +67,123 @@ def _hufenc_kernel(codes_ref, cw_ref, ln_ref, words_ref, nbits_ref):
     nbits_ref[0, 0] = wi * 32 + bits
 
 
+# ---------------------------------------------------------------------------
+# Gather-pack variant: the fused pipeline's pass-2 inner loop
+# ---------------------------------------------------------------------------
+#
+# The serial kernel above emits one padded word row PER BLOCK; the fused
+# pipeline (runtime/fused.py) needs the chunk's bitstream CONTIGUOUS
+# across block boundaries — the staged huffman.encode wire layout. The
+# gather-pack formulation inverts the parallelism: instead of one serial
+# packer per block, every OUTPUT word is computed independently by
+# gathering the <=`cands` codewords that overlap it (a 16-bit-max code
+# means at most 32 symbols start inside a 32-bit word, plus one spilling
+# in from the left). The per-symbol bit offsets come from one in-kernel
+# prefix sum; the first overlapping symbol of each word from a vectorized
+# binary search over those offsets. All gathers and VPU ops — the scatter
+# the naive formulation needs never appears.
+#
+# One program = one chunk: codes row, its codebook row and the output
+# words row live in VMEM for the whole pack. w32 is provisioned by the
+# caller from the exact payload bits (hist . lengths on the host), so
+# VMEM holds ~the real bit-rate, not the 16-bit worst case. TPU-scale
+# chunks beyond a few hundred KB of codes per program need a word-tiled
+# grid — tracked in ROADMAP.
+
+def _gather_pack_kernel(codes_ref, valid_ref, ln_ref, cw_ref, words_ref,
+                        nbits_ref, *, block_size: int, cands: int):
+    cv = codes_ref.shape[1]
+    w32 = words_ref.shape[1]
+    nblocks = nbits_ref.shape[1]
+    codes = codes_ref[...]                                   # (1, cv)
+    valid = valid_ref[...] != 0
+    ln_tbl = ln_ref[0, :]
+    cw_tbl = cw_ref[0, :]
+    lens = jnp.where(valid, ln_tbl[codes], 0)                # (1, cv) i32
+    vals = jnp.where(valid, cw_tbl[codes],
+                     jnp.uint32(0)).astype(jnp.uint32)
+    ends = jnp.cumsum(lens, axis=1)                          # prefix sum
+    starts = (ends - lens).astype(jnp.int32)
+
+    ends_row = ends[0]
+    starts_row = starts[0]
+    lens_row = lens[0]
+    vals_row = vals[0]
+    w_bit = jax.lax.broadcasted_iota(jnp.int32, (1, w32), 1)[0] * 32
+
+    # first symbol covering each word: vectorized binary search for
+    # searchsorted(ends, w_bit, side='right') — #(ends <= w_bit)
+    lo = jnp.zeros((w32,), jnp.int32)
+    hi = jnp.full((w32,), cv, jnp.int32)
+    for _ in range(max(int(cv).bit_length(), 1)):
+        active = lo < hi
+        mid = (lo + hi) >> 1
+        e = ends_row[jnp.clip(mid, 0, cv - 1)]
+        go = active & (e <= w_bit)
+        lo = jnp.where(go, mid + 1, lo)
+        hi = jnp.where(active & ~go, mid, hi)
+
+    cand = lo[:, None] + jax.lax.broadcasted_iota(
+        jnp.int32, (w32, cands), 1)
+    in_range = cand < cv
+    ci = jnp.clip(cand, 0, cv - 1)
+    off = starts_row[ci] - w_bit[:, None]
+    ln = lens_row[ci]
+    v = vals_row[ci]
+    left = 32 - off - ln
+    live = in_range & (off < 32) & (off + ln > 0)
+    ls = jnp.clip(left, 0, 31).astype(jnp.uint32)
+    rs = jnp.clip(-left, 0, 31).astype(jnp.uint32)
+    shifted = jnp.where(left >= 0, v << ls, v >> rs)
+    # live contributions are bit-disjoint => sum == or
+    words_ref[0, :] = jnp.where(live, shifted, jnp.uint32(0)).sum(
+        axis=1, dtype=jnp.uint32)
+
+    lens_p = jnp.pad(lens_row, (0, nblocks * block_size - cv))
+    nbits_ref[...] = lens_p.reshape(nblocks, block_size).sum(
+        axis=1, dtype=jnp.int32)[None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "w32", "cands",
+                                    "interpret"))
+def gather_pack(codes2: jax.Array, valid2: jax.Array, lengths_tbl: jax.Array,
+                cwords_tbl: jax.Array, *, block_size: int, w32: int,
+                cands: int = 33, interpret: bool = True):
+    """codes2/valid2 (C, cv); lengths_tbl (C, 1024) i32; cwords_tbl
+    (C, 1024) u32 — one codebook row per chunk.
+
+    Returns (words (C, w32) u32, block_nbits (C, nblocks) i32) in the
+    fused pipeline's contiguous per-chunk wire layout (bit-identical to
+    the staged ``core.huffman.encode`` stream cut at u32 grain).
+    """
+    C, cv = codes2.shape
+    nblocks = max(1, -(-cv // block_size))
+    kern = functools.partial(_gather_pack_kernel, block_size=block_size,
+                             cands=min(cands, cv + 1))
+    words, nbits = pl.pallas_call(
+        kern,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, cv), lambda c: (c, 0)),
+            pl.BlockSpec((1, cv), lambda c: (c, 0)),
+            pl.BlockSpec((1, lengths_tbl.shape[1]), lambda c: (c, 0)),
+            pl.BlockSpec((1, cwords_tbl.shape[1]), lambda c: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w32), lambda c: (c, 0)),
+            pl.BlockSpec((1, nblocks), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((C, w32), jnp.uint32),
+            jax.ShapeDtypeStruct((C, nblocks), jnp.int32),
+        ],
+        interpret=interpret,
+    )(codes2.astype(jnp.int32), valid2.astype(jnp.int32),
+      lengths_tbl.astype(jnp.int32), cwords_tbl.astype(jnp.uint32))
+    return words, nbits
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hufenc(codes: jax.Array, codewords: jax.Array, lengths: jax.Array,
            *, interpret: bool = True):

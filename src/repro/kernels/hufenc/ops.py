@@ -1,19 +1,37 @@
-"""Public wrapper: Huffman-encode a flat code array with a Codebook.
+"""Public wrappers for the hufenc kernels.
 
-Pads the tail block with symbol `pad_sym` (callers pass the most frequent
-symbol so the pad costs ~1 bit/value of the <1-block tail); returns the
-per-block packed words, per-block bit counts and the true symbol count so
-the host can trim/concatenate into the wire format.
+``hufenc_flat`` drives the serial per-block kernel (pads the tail block
+with symbol `pad_sym` — callers pass the most frequent symbol so the pad
+costs ~1 bit/value of the <1-block tail — and returns per-block packed
+words + bit counts + true symbol count for host trim/concatenate).
+
+``encode_pack`` is the `hufenc` dispatch op's 'pallas' implementation:
+the gather-pack kernel in the fused pipeline's contiguous wire layout,
+with ``interpret=None`` resolving per backend (compiled on TPU,
+interpreter everywhere else so CI exercises the kernel on CPU).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dispatch import default_interpret
 from . import kernel as K
+
+
+def encode_pack(codes2, valid2, lengths_tbl, cwords_tbl, block_size: int,
+                w32: int, cands: int = 33, *,
+                interpret: Optional[bool] = None):
+    """Same signature and bit-exact output as ``ref.encode_pack``."""
+    if interpret is None:
+        interpret = default_interpret()
+    return K.gather_pack(
+        jnp.asarray(codes2), jnp.asarray(valid2), jnp.asarray(lengths_tbl),
+        jnp.asarray(cwords_tbl), block_size=block_size, w32=w32,
+        cands=cands, interpret=bool(interpret))
 
 
 def hufenc_flat(codes: jax.Array, codewords, lengths, pad_sym: int = 512,

@@ -1,9 +1,17 @@
-"""Pure-jnp oracle for the hufenc kernel: vectorized word-OR construction.
+"""Pure-jnp oracles / reference implementations for the hufenc kernels.
 
-Same output layout as the kernel (per-block MSB-first u32 words + bit
-counts) but built with cumsum offsets + segment sums instead of a serial
-loop — the two implementations are completely independent, which is what
-makes the allclose sweep meaningful.
+Two entry points, one per packing layout:
+
+  * ``hufenc``      — oracle for the serial per-block kernel: same
+    padded-row output layout, but built with cumsum offsets + segment
+    sums instead of a serial loop — the two implementations are
+    completely independent, which is what makes the allclose sweep
+    meaningful.
+  * ``encode_pack`` — the `hufenc` dispatch op's 'jnp' implementation
+    (contiguous per-chunk wire layout, the fused pipeline's pass 2). It
+    doubles as the bit-identity reference for the Pallas gather-pack
+    kernel; the staged ``core.huffman.encode`` remains the ground-truth
+    oracle for both.
 """
 from __future__ import annotations
 
@@ -43,3 +51,63 @@ def hufenc(codes: jax.Array, codewords: jax.Array, lengths: jax.Array):
 
     words, nbits = jax.vmap(one_block)(codes)
     return words, nbits.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Gather-pack (fused-pipeline wire layout): the `hufenc` op's 'jnp' impl
+# ---------------------------------------------------------------------------
+
+def _encode_one(codes, valid, lengths, cwords, block_size, w32, cands):
+    """One chunk: symbol codes -> packed u32 bitstream (host-layout).
+
+    Replicates core.huffman.encode bit-for-bit, but scatter-free: for
+    each OUTPUT word, searchsorted on the cumulative bit offsets finds
+    the first overlapping symbol and the `cands`-candidate window is
+    gathered and OR-composed. Gathers vectorize on every backend; the
+    scatter formulation serializes on CPU XLA.
+    """
+    cv = codes.shape[0]
+    lens = jnp.where(valid, lengths[codes], 0)
+    vals = jnp.where(valid, cwords[codes], 0).astype(jnp.uint32)
+    ends = jnp.cumsum(lens)
+    starts = (ends - lens).astype(jnp.int32)
+
+    w_bit = jnp.arange(w32, dtype=jnp.int32) * 32
+    first = jnp.searchsorted(ends, w_bit, side="right")   # covers bit w_bit
+    cand = first[:, None] + jnp.arange(cands, dtype=jnp.int32)[None, :]
+    in_range = cand < cv
+    ci = jnp.clip(cand, 0, cv - 1)
+    off = starts[ci] - w_bit[:, None]
+    ln = lens[ci]
+    v = vals[ci]
+    left = 32 - off - ln
+    live = in_range & (off < 32) & (off + ln > 0)
+    ls = jnp.clip(left, 0, 31).astype(jnp.uint32)
+    rs = jnp.clip(-left, 0, 31).astype(jnp.uint32)
+    shifted = jnp.where(left >= 0, v << ls, v >> rs)
+    # live contributions are bit-disjoint => sum == or
+    words = jnp.where(live, shifted, jnp.uint32(0)).sum(
+        axis=1, dtype=jnp.uint32)
+
+    nblocks = -(-cv // block_size)
+    lens_p = jnp.pad(lens, (0, nblocks * block_size - cv))
+    block_nbits = lens_p.reshape(nblocks, block_size).sum(axis=1)
+    return words, block_nbits
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "w32", "cands"))
+def encode_pack(codes2, valid2, lengths_tbl, cwords_tbl, block_size, w32,
+                cands=33):
+    """Encode every chunk against its own codebook row, in one trace.
+
+    The `hufenc` dispatch op: (codes2, valid2 (C, cv); per-chunk
+    codebook tables (C, 1024)) -> (words (C, w32) u32, block_nbits
+    (C, nblocks) i32) in the contiguous per-chunk wire layout. w32 is
+    sized by the caller from the EXACT per-chunk payload bits
+    (hist . lengths, free on the host), bucketed — the gather work
+    tracks the real bit-rate instead of the 16-bit worst case.
+    """
+    return jax.vmap(
+        lambda c, v, ln, cw: _encode_one(c, v, ln, cw, block_size, w32,
+                                         cands))(
+        codes2, valid2, lengths_tbl, cwords_tbl)

@@ -17,7 +17,11 @@ streaming structure (and cuSZ's fused GPU kernels):
             uses (codeword generation is the slow serial path, §3.2).
   pass 2  — one traced computation Huffman-encodes and bit-packs every
             chunk against its per-chunk codebook. The packed payload +
-            per-block bit counts come back in a single transfer.
+            per-block bit counts come back in a single transfer. The
+            gather-pack inner loop resolves through the kernel-dispatch
+            layer (kernels/dispatch.py op 'hufenc': 'jnp' scatter-free
+            formulation or the Pallas VMEM-resident kernel, selected by
+            CEAZConfig(kernel_impl=...)).
 
 Bit-exactness contract: given the same quantization backend, the fused
 path produces payloads (words, block_nbits, outliers, literals)
@@ -45,6 +49,7 @@ import numpy as np
 from ..core import dualquant as core_dq
 from ..core.codebook import AdaptiveCoder
 from ..core.huffman import DEFAULT_MAX_LEN, NUM_SYMBOLS, Codebook
+from ..kernels import dispatch
 
 # Device bitstreams are packed at the codebook's length limit; the wire
 # format (and the candidate window below) assumes codes never exceed 16
@@ -153,6 +158,11 @@ def _extract_sparse(mask, values, k):
 # output word, plus one that spills in from the left — 33 candidates in
 # the worst case. The host shrinks the window when the batch's codebooks
 # have a larger minimum code length (bucketed to bound recompiles).
+# The gather-pack itself lives behind the kernel-dispatch layer
+# (kernels/dispatch.py, op 'hufenc'): 'jnp' is the scatter-free
+# searchsorted+gather formulation (kernels/hufenc/ref.py), 'pallas' the
+# explicit VMEM-resident kernel (kernels/hufenc/kernel.py); both are
+# bit-identical and selected via CEAZConfig(kernel_impl=...).
 _CANDS = 33
 _CAND_BUCKETS = (9, 17, 33)          # min code length >= 4 / >= 2 / >= 1
 
@@ -163,60 +173,6 @@ def _cand_window(min_len: int) -> int:
         if need <= b:
             return b
     return _CANDS
-
-
-def _encode_one(codes, valid, lengths, cwords, block_size, w32, cands):
-    """One chunk: symbol codes -> packed u32 bitstream (host-layout).
-
-    Replicates core.huffman.encode bit-for-bit, but scatter-free: for
-    each OUTPUT word, searchsorted on the cumulative bit offsets finds
-    the first overlapping symbol and the 33-candidate window is gathered
-    and OR-composed. Gathers vectorize on every backend; the scatter
-    formulation serializes on CPU XLA.
-    """
-    cv = codes.shape[0]
-    lens = jnp.where(valid, lengths[codes], 0)
-    vals = jnp.where(valid, cwords[codes], 0).astype(jnp.uint32)
-    ends = jnp.cumsum(lens)
-    starts = (ends - lens).astype(jnp.int32)
-    total_bits = ends[-1]
-
-    w_bit = jnp.arange(w32, dtype=jnp.int32) * 32
-    first = jnp.searchsorted(ends, w_bit, side="right")   # covers bit w_bit
-    cand = first[:, None] + jnp.arange(cands, dtype=jnp.int32)[None, :]
-    in_range = cand < cv
-    ci = jnp.clip(cand, 0, cv - 1)
-    off = starts[ci] - w_bit[:, None]
-    ln = lens[ci]
-    v = vals[ci]
-    left = 32 - off - ln
-    live = in_range & (off < 32) & (off + ln > 0)
-    ls = jnp.clip(left, 0, 31).astype(jnp.uint32)
-    rs = jnp.clip(-left, 0, 31).astype(jnp.uint32)
-    shifted = jnp.where(left >= 0, v << ls, v >> rs)
-    # live contributions are bit-disjoint => sum == or
-    words = jnp.where(live, shifted, jnp.uint32(0)).sum(
-        axis=1, dtype=jnp.uint32)
-
-    nblocks = -(-cv // block_size)
-    lens_p = jnp.pad(lens, (0, nblocks * block_size - cv))
-    block_nbits = lens_p.reshape(nblocks, block_size).sum(axis=1)
-    return words, block_nbits, total_bits
-
-
-@functools.partial(jax.jit, static_argnames=("block_size", "w32", "cands"))
-def _encode_pack(codes2, valid2, lengths_tbl, cwords_tbl, block_size, w32,
-                 cands=_CANDS):
-    """Encode every chunk against its own codebook row, in one trace.
-
-    w32 is sized by the caller from the EXACT per-chunk payload bits
-    (hist . lengths, free on the host), bucketed — the gather work
-    tracks the real bit-rate instead of the 16-bit worst case.
-    """
-    return jax.vmap(
-        lambda c, v, ln, cw: _encode_one(c, v, ln, cw, block_size, w32,
-                                         cands))(
-        codes2, valid2, lengths_tbl, cwords_tbl)
 
 
 @functools.partial(jax.jit, static_argnames=("k_outlier",))
@@ -388,18 +344,22 @@ def _k_outlier(chunk_values: int) -> int:
     return min(chunk_values, max(1024, chunk_values // 8))
 
 
-def _encode_all(p1: _Pass1, decisions, block_size: int):
+def _encode_all(p1: _Pass1, decisions, block_size: int,
+                kernel_impl: str = "auto"):
     """Pass 2 for one array: batched encode+pack plus outlier escapes.
 
     The exact per-chunk payload size is hist . lengths — free on the
     host — so the traced pack is provisioned for the real bit-rate.
-    Returns (words_np, block_nbits_np, totals, outliers)."""
+    `kernel_impl` selects the gather-pack implementation through the
+    kernel-dispatch registry. Returns (words_np, block_nbits_np, totals,
+    outliers)."""
     lengths_np, cwords_np = _codebook_tables(decisions)
     totals = np.einsum("cs,cs->c", p1.hists.astype(np.int64),
                        lengths_np.astype(np.int64))
     w32 = _w32_bucket(totals, p1.chunk_values)
     cands = _cand_window(lengths_np[lengths_np > 0].min())
-    words, block_nbits, _ = _encode_pack(
+    encode_pack = dispatch.resolve("hufenc", kernel_impl)
+    words, block_nbits = encode_pack(
         p1.codes2, p1.valid2, jnp.asarray(lengths_np),
         jnp.asarray(cwords_np), block_size, w32, cands)
     return (np.asarray(words), np.asarray(block_nbits), totals,
@@ -436,7 +396,8 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
                            coder: AdaptiveCoder, chunk_values: int,
                            block_size: int, adaptive: bool = True,
                            exact_build: bool = False,
-                           stats_on_device: Optional[bool] = None):
+                           stats_on_device: Optional[bool] = None,
+                           kernel_impl: str = "auto"):
     """Fused abs/rel compression of a float32 array (Lorenzo predictor).
 
     Returns a CEAZCompressed bit-compatible with the staged jax-backend
@@ -453,7 +414,7 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
 
     p1 = _run_pass1(work, eb, ndim, chunk_values, stats_on_device)
     decisions = _policy(p1.hists, coder, adaptive, exact_build)
-    enc = _encode_all(p1, decisions, block_size)
+    enc = _encode_all(p1, decisions, block_size, kernel_impl)
     chunks = _assemble_chunks(p1, *enc, eb, decisions, block_size)
     lit_idx, lit_val = _literals(p1, x.reshape(-1), eb, ndim, work.shape)
     return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
@@ -465,7 +426,8 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
 def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
                          chunk_values: int, block_size: int,
                          adaptive: bool = True, exact_build: bool = False,
-                         stats_on_device: Optional[bool] = None):
+                         stats_on_device: Optional[bool] = None,
+                         kernel_impl: str = "auto"):
     """Fused fixed-ratio compression (1-D stream of chunks).
 
     The eb feedback loop is inherently sequential across chunks (chunk
@@ -483,7 +445,7 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
         seg = jnp.asarray(flat[s:e], jnp.float32)
         p1 = _run_pass1(seg, eb, 1, e - s, stats_on_device)
         decisions = _policy(p1.hists, coder, adaptive, exact_build)
-        enc = _encode_all(p1, decisions, block_size)
+        enc = _encode_all(p1, decisions, block_size, kernel_impl)
         ch = _assemble_chunks(p1, *enc, eb, decisions, block_size)[0]
         li, lv = _literals(p1, flat[s:e], eb, 1, (e - s,))
         lit_idx_parts.append(li + s)
@@ -523,7 +485,8 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
                    stats_on_device: Optional[bool] = None,
                    tau0: Optional[float] = None,
                    tau1: Optional[float] = None,
-                   adaptive: bool = True, exact_build: bool = False):
+                   adaptive: bool = True, exact_build: bool = False,
+                   kernel_impl: str = "auto"):
     """Compress many same-shape float32 shards through ONE pair of fused
     device passes, optionally sharded over the mesh's batch axes.
 
@@ -610,7 +573,8 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
     w32 = _w32_bucket(totals, chunk_values)
     cands = _cand_window(lengths_np[lengths_np > 0].min())
     flat2 = lambda a: a.reshape((nshards * n_chunks,) + a.shape[2:])
-    words, block_nbits, _ = _encode_pack(
+    encode_pack = dispatch.resolve("hufenc", kernel_impl)
+    words, block_nbits = encode_pack(
         flat2(codes3), flat2(valid3), jnp.asarray(lengths_np),
         jnp.asarray(cwords_np), block_size, w32, cands)
     words_np = np.asarray(words)

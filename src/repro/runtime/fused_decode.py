@@ -46,62 +46,17 @@ import numpy as np
 
 from ..core import dualquant as core_dq
 from ..core.huffman import DEFAULT_MAX_LEN, Codebook, replay_codebooks
+from ..kernels import dispatch
 
 MAX_CODE_BITS = DEFAULT_MAX_LEN
 _TBL = 1 << MAX_CODE_BITS
 
-
-# ---------------------------------------------------------------------------
-# Pass 1: batched block-parallel canonical-Huffman table decode
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnames=("block_size",))
-def _decode_pass(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
-                 block_size):
-    """All chunks -> symbol codes, in one traced computation.
-
-    words2   (C, W)  uint32 — wire bitstream, u64 words split MSB-first
-    nbits2   (C, NB) int32  — per-block bit counts (zero-padded)
-    counts   (C,)    int32  — valid symbols per chunk
-    sym/len_flat (K*2^16,)  — stacked decode tables, one row per unique
-                              codebook; cb_idx (C,) selects the row.
-
-    The walk is sequential IN-BLOCK (a prefix code must be) but every
-    (chunk, block) lane advances in lock-step — the python-level loop of
-    the staged decoder becomes one fori_loop over in-block position with
-    C*NB-wide vector steps.
-    """
-    C, NB = nbits2.shape
-    ends = jnp.cumsum(nbits2, axis=1)
-    starts = jnp.concatenate(
-        [jnp.zeros((C, 1), jnp.int32), ends[:, :-1].astype(jnp.int32)],
-        axis=1)
-    counts_b = jnp.clip(
-        counts[:, None] - jnp.arange(NB, dtype=jnp.int32)[None, :]
-        * block_size, 0, block_size)
-    cb_off = cb_idx.astype(jnp.int32)[:, None] * _TBL      # (C, 1)
-
-    def body(i, state):
-        cursors, out = state
-        w = cursors >> 5
-        b = (cursors & 31).astype(jnp.uint32)
-        x0 = jnp.take_along_axis(words2, w, axis=1)
-        x1 = jnp.take_along_axis(words2, w + 1, axis=1)
-        win = (x0 << b) | jnp.where(
-            b > 0, x1 >> (jnp.uint32(32) - jnp.maximum(b, jnp.uint32(1))),
-            jnp.uint32(0))
-        pk = (win >> jnp.uint32(32 - MAX_CODE_BITS)).astype(jnp.int32)
-        sym = sym_flat[cb_off + pk]
-        ln = len_flat[cb_off + pk].astype(jnp.int32)
-        active = counts_b > i
-        out = out.at[i].set(jnp.where(active, sym, jnp.uint16(0)))
-        cursors = cursors + jnp.where(active, ln, 0)
-        return cursors, out
-
-    out0 = jnp.zeros((block_size, C, NB), jnp.uint16)
-    _, out = jax.lax.fori_loop(0, block_size, body, (starts, out0))
-    # (pos, C, NB) -> (C, NB, pos): symbol s of block b sits at b*bs + s
-    return out.transpose(1, 2, 0).reshape(C, NB * block_size)
+# Pass 1 — the batched block-parallel canonical-Huffman table walk —
+# lives behind the kernel-dispatch layer (kernels/dispatch.py, op
+# 'hufdec'): 'jnp' is the lockstep vectorized walk this module ran
+# inline before PR 4 (kernels/hufdec/ref.py), 'pallas' the explicit
+# VMEM-resident kernel (kernels/hufdec/kernel.py). Both are bit-exact;
+# CEAZConfig(kernel_impl=...) selects, 'auto' resolves per backend.
 
 
 # ---------------------------------------------------------------------------
@@ -178,8 +133,9 @@ def fused_decode_ok(c, offline: Codebook) -> bool:
 class _ChunkBatch:
     """Host staging of one group's chunks for the batched decode pass."""
 
-    def __init__(self, block_size: int):
+    def __init__(self, block_size: int, kernel_impl: str = "auto"):
         self.block_size = block_size
+        self.kernel_impl = kernel_impl
         self.words: List[np.ndarray] = []          # u32 per chunk
         self.nbits: List[np.ndarray] = []
         self.counts: List[int] = []
@@ -227,10 +183,11 @@ class _ChunkBatch:
             tables_len.append(np.zeros(_TBL, np.uint8))
         sym_flat = np.concatenate(tables_sym)
         len_flat = np.concatenate(tables_len)
-        return _decode_pass(jnp.asarray(words2), jnp.asarray(nbits2),
-                            jnp.asarray(counts), jnp.asarray(sym_flat),
-                            jnp.asarray(len_flat), jnp.asarray(cb_idx),
-                            self.block_size)
+        decode_blocks = dispatch.resolve("hufdec", self.kernel_impl)
+        return decode_blocks(jnp.asarray(words2), jnp.asarray(nbits2),
+                             jnp.asarray(counts), jnp.asarray(sym_flat),
+                             jnp.asarray(len_flat), jnp.asarray(cb_idx),
+                             self.block_size)
 
 
 def _padded_outliers(chunks) -> Tuple[np.ndarray, np.ndarray]:
@@ -284,15 +241,18 @@ def decompress_one(codes_rows, c) -> np.ndarray:
 
 
 def decompress_batch(comps: Sequence, block_size: int,
-                     offline: Codebook) -> List[np.ndarray]:
+                     offline: Codebook,
+                     kernel_impl: str = "auto") -> List[np.ndarray]:
     """Fused decode of a group of CEAZCompressed streams.
 
-    All chunks of all arrays share ONE batched Huffman-decode pass;
-    the inverse-quant pass then runs per array (its cumsum rank and
-    shape are array-specific). Callers must pre-filter eligibility with
-    ``fused_decode_ok`` — the ``CEAZ.decompress_batch`` facade does.
+    All chunks of all arrays share ONE batched Huffman-decode pass
+    (`kernel_impl` selects its implementation through the dispatch
+    registry); the inverse-quant pass then runs per array (its cumsum
+    rank and shape are array-specific). Callers must pre-filter
+    eligibility with ``fused_decode_ok`` — the ``CEAZ.decompress_batch``
+    facade does.
     """
-    batch = _ChunkBatch(block_size)
+    batch = _ChunkBatch(block_size, kernel_impl)
     for c in comps:
         batch.add_comp(c, offline)
     if not batch.counts:

@@ -1,0 +1,38 @@
+"""Docs surface stays truthful: link/anchor check + the doctest-checked
+API walkthrough (the same two checks CI's docs lane runs, kept in
+tier-1 so local runs catch stale docs before CI does)."""
+import doctest
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import docs_check  # noqa: E402
+
+
+def test_markdown_links_and_anchors_resolve():
+    assert docs_check.check_repo(REPO) == []
+
+
+def test_readme_links_normative_docs():
+    text = open(os.path.join(REPO, "README.md"), encoding="utf-8").read()
+    assert "(docs/ARCHITECTURE.md)" in text
+    assert "(docs/STREAM_FORMAT.md)" in text
+
+
+def test_slugify_matches_github_style():
+    assert docs_check.slugify("Stream-level `meta`") == "stream-level-meta"
+    assert docs_check.slugify("The `.ceazs` stream format (v1)") \
+        == "the-ceazs-stream-format-v1"
+
+
+def test_api_walkthrough_doctests():
+    import importlib.util
+    path = os.path.join(REPO, "examples", "api_walkthrough.py")
+    spec = importlib.util.spec_from_file_location("api_walkthrough", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    failures, tested = doctest.testmod(mod)
+    assert tested > 0
+    assert failures == 0

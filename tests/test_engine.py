@@ -317,6 +317,33 @@ def test_stream_records_block_size_and_reader_uses_it(tmp_path, shards):
         E.read_stream_arrays(path, bad)
 
 
+def test_legacy_footer_without_block_size_warns_and_decodes(tmp_path,
+                                                           shards):
+    """Regression: streams from pre-block-grain writers (footer meta has
+    no 'block_size') must decode through the self-configuring reader by
+    falling back to the config default WITH a warning — not KeyError,
+    not a silent guess."""
+    path = str(tmp_path / "legacy.ceazs")
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+    # legacy writer: engine constructed without block_size, so the
+    # footer meta carries no grain (exactly what pre-PR-3 writers wrote)
+    eng = E.AsyncCompressWriteEngine(
+        path, E.ceaz_compress_fn(comp), fsync=False)
+    with eng:
+        for i, s in enumerate(shards):
+            eng.submit(f"shard_{i}", s)
+    with E.StreamReader(path) as r:
+        assert "block_size" not in r.meta
+    with pytest.warns(UserWarning, match="block_size"):
+        back = E.read_stream_arrays(path)
+    for a, b in zip(back, shards):
+        assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+    # an explicitly configured reader stays warning-free
+    back2 = E.read_stream_arrays(path, comp)
+    for a, b in zip(back2, back):
+        assert np.array_equal(a, b)
+
+
 # -- consumers ---------------------------------------------------------------
 
 def test_parallel_read_self_configures_block_size(tmp_path, shards):

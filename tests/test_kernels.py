@@ -7,6 +7,7 @@ from repro.core import huffman as H
 from repro.kernels.bitpack import kernel as BK, ops as BO, ref as BR
 from repro.kernels.dualquant import kernel as DK, ops as DO, ref as DR
 from repro.kernels.histogram import ops as HO
+from repro.kernels.hufdec import ops as HDO, ref as HDR
 from repro.kernels.hufenc import kernel as EK, ops as EO, ref as ER
 
 
@@ -70,6 +71,50 @@ def test_hufenc_kernel_vs_ref_and_host_decode(sigma, rng):
     stream, _ = EO.to_host_stream(wk, nk, len(x), cb.lengths)
     dec = H.decode(stream, np.asarray(nk, np.int64), len(x), 4096, cb)
     assert np.array_equal(dec, x.astype(np.uint16))
+
+
+@pytest.mark.parametrize("sigma", [5, 80])
+def test_gather_pack_kernel_vs_ref(sigma, rng):
+    """Fused-wire-layout encode: Pallas gather-pack vs the jnp ref."""
+    cv = 6000
+    codes = np.clip(rng.normal(512, sigma, (3, cv)), 0, 1023) \
+        .astype(np.int32)
+    valid = np.ones((3, cv), bool)
+    valid[2, 5000:] = False
+    cb = H.Codebook.from_freqs(
+        np.bincount(codes.reshape(-1), minlength=1024))
+    lengths = np.broadcast_to(cb.lengths.astype(np.int32), (3, 1024))
+    cwords = np.broadcast_to(cb.codes.astype(np.uint32), (3, 1024))
+    args = (jnp.asarray(codes), jnp.asarray(valid), jnp.asarray(lengths),
+            jnp.asarray(cwords), 1024, 4096, 33)
+    wr, nr = ER.encode_pack(*args)
+    wk, nk = EO.encode_pack(*args, interpret=True)
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+
+
+def test_hufdec_kernel_vs_ref_roundtrip(rng):
+    """Table-decode kernel vs jnp ref, through a real encoded stream."""
+    from repro.runtime.fused_decode import _u64_to_u32
+    bs = 512
+    syms = np.clip(rng.normal(512, 25, 3000), 0, 1023).astype(np.int64)
+    cb = H.Codebook.from_freqs(np.bincount(syms, minlength=1024))
+    w64, bnb, _ = H.encode(syms, cb, bs)
+    u32 = _u64_to_u32(w64)
+    words2 = np.zeros((1, len(u32) + 2), np.uint32)
+    words2[0, :len(u32)] = u32
+    nbits2 = bnb.astype(np.int32)[None, :]
+    counts = np.array([len(syms)], np.int32)
+    sym_flat, len_flat = cb.tables()
+    cb_idx = np.zeros(1, np.int32)
+    args = (jnp.asarray(words2), jnp.asarray(nbits2), jnp.asarray(counts),
+            jnp.asarray(sym_flat), jnp.asarray(len_flat),
+            jnp.asarray(cb_idx), bs)
+    out_r = np.asarray(HDR.decode_blocks(*args))
+    out_k = np.asarray(HDO.decode_blocks(*args, interpret=True))
+    np.testing.assert_array_equal(out_k, out_r)
+    np.testing.assert_array_equal(out_k[0][:len(syms)],
+                                  syms.astype(np.uint16))
 
 
 @pytest.mark.parametrize("bits", [2, 4, 8, 16])

@@ -1,0 +1,136 @@
+"""Docs link/anchor checker for the CI docs lane.
+
+Validates every markdown link in README.md and docs/*.md:
+
+  * relative file targets must exist (http(s)/mailto are skipped —
+    the lane must not depend on network);
+  * ``#anchor`` fragments (same-file or on a linked .md) must match a
+    heading in the target, using GitHub's slugification;
+  * README.md must link both normative docs (docs/ARCHITECTURE.md and
+    docs/STREAM_FORMAT.md) — the acceptance contract of the docs
+    surface.
+
+Exit code 0 when clean, 1 with one line per violation otherwise:
+
+    python tools/docs_check.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Dict, List, Set
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+FENCE_RE = re.compile(r"^(```|~~~)")
+REQUIRED_README_LINKS = ("docs/ARCHITECTURE.md", "docs/STREAM_FORMAT.md")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug: code ticks dropped, punctuation
+    stripped, spaces to hyphens, lowercased."""
+    text = heading.replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def _markdown_files(root: str) -> List[str]:
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs, name))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def _anchors(path: str, cache: Dict[str, Set[str]]) -> Set[str]:
+    if path not in cache:
+        slugs: Set[str] = set()
+        seen: Dict[str, int] = {}
+        in_fence = False
+        with open(path, encoding="utf-8") as f:
+            for line in f:
+                if FENCE_RE.match(line):
+                    in_fence = not in_fence
+                    continue
+                if in_fence:
+                    continue
+                m = HEADING_RE.match(line)
+                if m:
+                    slug = slugify(m.group(1))
+                    n = seen.get(slug, 0)
+                    seen[slug] = n + 1
+                    slugs.add(slug if n == 0 else f"{slug}-{n}")
+        cache[path] = slugs
+    return cache[path]
+
+
+def check_file(md_path: str, root: str,
+               anchor_cache: Dict[str, Set[str]]) -> List[str]:
+    errors = []
+    rel = os.path.relpath(md_path, root)
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # scheme
+                    continue
+                if target.startswith("#"):
+                    frag, tgt_path = target[1:], md_path
+                else:
+                    path_part, _, frag = target.partition("#")
+                    tgt_path = os.path.normpath(os.path.join(
+                        os.path.dirname(md_path), path_part))
+                    if not os.path.exists(tgt_path):
+                        errors.append(f"{rel}:{lineno}: broken link "
+                                      f"-> {target}")
+                        continue
+                if frag:
+                    if not tgt_path.endswith(".md"):
+                        continue
+                    if frag not in _anchors(tgt_path, anchor_cache):
+                        errors.append(f"{rel}:{lineno}: missing anchor "
+                                      f"-> {target}")
+    return errors
+
+
+def check_repo(root: str) -> List[str]:
+    anchor_cache: Dict[str, Set[str]] = {}
+    errors: List[str] = []
+    files = _markdown_files(root)
+    if not files:
+        return [f"{root}: no markdown files found (README.md missing?)"]
+    for md in files:
+        errors.extend(check_file(md, root, anchor_cache))
+    readme = os.path.join(root, "README.md")
+    if os.path.isfile(readme):
+        with open(readme, encoding="utf-8") as f:
+            text = f.read()
+        for required in REQUIRED_README_LINKS:
+            if f"({required})" not in text:
+                errors.append(f"README.md: must link {required}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    root = os.path.abspath(argv[1] if len(argv) > 1 else
+                           os.path.join(os.path.dirname(__file__), ".."))
+    errors = check_repo(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    if not errors:
+        n = len(_markdown_files(root))
+        print(f"docs_check: {n} markdown files clean")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
