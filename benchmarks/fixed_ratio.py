@@ -1,15 +1,26 @@
-"""Paper Fig 13 + §4.7: fixed-ratio mode accuracy.
+"""Paper Fig 13 + §4.7: fixed-ratio mode accuracy — plus the speculative
+pipeline gate.
 
-Targets 10.5 (paper: single-precision) and 21 (paper: double) plus extra
-points; the paper accepts <=15% deviation between target and actual CR.
+`run()` reproduces the accuracy table: targets 10.5 (paper:
+single-precision) and 21 (paper: double) plus extra points; the paper
+accepts <=15% deviation between target and actual CR.
+
+`run_speculation()` is the nightly perf gate for the speculative
+fixed-ratio pipeline (runtime/fused.py): on a >=8-chunk stream in the
+dispatch-bound regime the windowed path must be >= 1.5x faster than the
+chunk-sequential fused loop (speculation='off') while emitting
+byte-identical streams. Invoke as
+``python -m benchmarks.fixed_ratio speculation``.
 """
 from __future__ import annotations
+
+import sys
 
 import numpy as np
 
 from repro.core import CEAZ, CEAZConfig, default_offline_codebook, psnr
 
-from .common import corpus, emit
+from .common import corpus, emit, time_call
 
 
 _DOUBLES = ("nwchem", "brown", "s3d")    # float64 in SDRBench (paper T.1)
@@ -42,5 +53,50 @@ def run():
     return rows
 
 
+def run_speculation():
+    """Speculative vs chunk-sequential fused fixed-ratio (CPU gate).
+
+    32 chunks x 8192 values puts the sequential loop in its
+    dispatch-bound regime — exactly the overhead the ROADMAP's "batch
+    win" refers to; per-value device work is identical on both paths.
+    Gate: byte-identical output AND >= 1.5x on this >= 8-chunk stream.
+    """
+    offline_cb = default_offline_codebook()
+    rng = np.random.default_rng(7)
+    n_chunks, cv = 32, 8192
+    x = np.cumsum(rng.standard_normal(n_chunks * cv)).astype(np.float32)
+    mk = lambda spec: CEAZ(
+        CEAZConfig(mode="fixed_ratio", target_ratio=8.0, use_fused=True,
+                   chunk_bytes=cv * 4, block_size=4096, speculation=spec),
+        offline_codebook=offline_cb)
+    seq, spec = mk("off"), mk("auto")
+    c_seq = seq.compress(x)                      # warm jit caches (twice:
+    c_spec = spec.compress(x)                    # the deterministic repair
+    seq.compress(x)                              # pattern must be compiled
+    spec.compress(x)                             # before timing)
+    ident = (len(c_seq.chunks) == len(c_spec.chunks)
+             and all(a.eb == b.eb and np.array_equal(a.words, b.words)
+                     and np.array_equal(a.block_nbits, b.block_nbits)
+                     for a, b in zip(c_seq.chunks, c_spec.chunks))
+             and np.array_equal(c_seq.literal_idx, c_spec.literal_idx))
+    _, t_seq = time_call(seq.compress, x, repeats=7)
+    _, t_spec = time_call(spec.compress, x, repeats=7)
+    speedup = t_seq / t_spec
+    rows = [dict(kind="summary", n_chunks=n_chunks, chunk_values=cv,
+                 sequential_s=t_seq, speculative_s=t_spec,
+                 speedup=speedup, byte_identical=bool(ident))]
+    emit("fixed_ratio_speculation", rows,
+         us_per_call=t_spec * 1e6,
+         derived=f"speedup={speedup:.2f}x;byte_identical={ident};"
+                 f"gate>=1.5x")
+    assert ident, "speculative stream differs from sequential oracle"
+    assert speedup >= 1.5, (
+        f"speculative fixed-ratio only {speedup:.2f}x over sequential")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    if len(sys.argv) > 1 and sys.argv[1] == "speculation":
+        run_speculation()
+    else:
+        run()

@@ -22,6 +22,7 @@ def main() -> None:
         ("update_size(Fig11)", update_size.run),
         ("chi_thresholds(Fig12)", chi_thresholds.run),
         ("fixed_ratio(Fig13)", fixed_ratio.run),
+        ("fixed_ratio_speculation(gate)", fixed_ratio.run_speculation),
         ("ratio_distortion(Fig14/T4/T5)", ratio_distortion.run),
         ("throughput(Fig15/16,T6/T7)", throughput.run),
         ("fused_pipeline(Fig4)", fused_pipeline.run),

@@ -35,6 +35,8 @@ CHUNK_HEADER_BITS = 128
 BLOCK_COUNT_BITS = 32
 OUTLIER_BITS = 64          # 32-bit position + 32-bit delta
 
+value_range = dq.value_range       # re-export: the facade's bound scale
+
 
 @dataclasses.dataclass
 class CompressedChunk:
@@ -134,10 +136,19 @@ class CEAZConfig:
     # Device-resident fused pipeline (runtime/fused.py): per-value work
     # (dual-quant -> histogram -> Huffman -> bit-pack) runs as jitted
     # batched device passes; only histograms and the final payload cross
-    # the host boundary. Applies to float32 Lorenzo compression; float64
-    # and value-direct inputs fall back to the staged path below, which
-    # also remains the bit-exactness reference (see tests/test_fused.py).
+    # the host boundary. Covers the whole dtype x predictor x mode
+    # matrix (float32/float64, lorenzo/none, abs/rel/fixed_ratio); the
+    # staged path below remains the bit-exactness reference
+    # (tests/test_fused.py, tests/test_full_grid.py).
     use_fused: bool = False
+    # Fixed-ratio speculation window (runtime/fused.py): how many chunks
+    # each fused device pass quantizes against rate-law-predicted error
+    # bounds while the exact eb feedback chain is replayed on the host.
+    # 'auto' (window 8), an explicit int >= 1, or 'off' to run the
+    # sequential chunk loop — the byte-identical oracle the speculative
+    # path is tested against. Output bytes NEVER depend on this knob;
+    # a misprediction costs wasted device work, not different bits.
+    speculation: int | str = "auto"
     # Inner-loop implementation for the fused pipeline's two hot loops,
     # resolved through kernels/dispatch.py: 'jnp' (XLA-compiled
     # jax.numpy), 'pallas' (explicit kernels; interpret=True off-TPU) or
@@ -179,8 +190,7 @@ class CEAZ:
     def _abs_eb(self, x: np.ndarray) -> float:
         if self.cfg.mode == "abs":
             return self.cfg.eb
-        vrange = float(np.max(x) - np.min(x)) or 1.0
-        return self.cfg.eb * vrange
+        return self.cfg.eb * value_range(x)
 
     def _dual_quantize(self, x: np.ndarray, eb: float, ndim: int):
         if self.cfg.backend == "pallas":
@@ -235,18 +245,19 @@ class CEAZ:
 
         Args:
           x: float32 or float64 array, any shape (Lorenzo prediction
-            uses up to rank 3; higher ranks fold leading axes).
+            uses up to rank 3; higher ranks fold leading axes). Empty
+            arrays compress to a zero-chunk stream.
 
         Returns a :class:`CEAZCompressed` carrying the packed chunk
         payloads, the outlier/literal escape channels and everything a
         decoder needs except the block grain (``cfg.block_size`` —
         recorded in stream footers by the I/O layer).
 
-        Routing: with ``cfg.use_fused``, float32 Lorenzo inputs run the
-        fused device pipeline; float64 and value-direct inputs (an
-        explicit ``predictor='none'`` or an ``'auto'`` probe choosing
-        it) transparently take the host-staged path. Output bits do not
-        depend on the path taken.
+        Routing: with ``cfg.use_fused``, every dtype x predictor x mode
+        combination runs the fused device pipeline (float64 and
+        value-direct included); ``use_fused=False`` keeps the
+        host-staged reference. Output bits do not depend on the path
+        taken.
 
         Raises:
           TypeError: non-float dtype.
@@ -255,42 +266,38 @@ class CEAZ:
         x = np.asarray(x)
         if x.dtype not in (np.float32, np.float64):
             raise TypeError(f"CEAZ compresses float data, got {x.dtype}")
+        if self.cfg.mode not in ("abs", "rel", "fixed_ratio"):
+            raise ValueError(self.cfg.mode)
         word_bits = x.dtype.itemsize * 8
-        # fused covers float32 Lorenzo only; float64 and value-direct
-        # inputs fall back to the host-staged reference HERE — callers
-        # never need their own eligibility split
-        fused_ok = self.cfg.use_fused and x.dtype == np.float32
+        if x.size == 0:
+            return CEAZCompressed(
+                shape=x.shape, dtype=str(x.dtype), ndim=1,
+                mode=self.cfg.mode, chunks=[], word_bits=word_bits,
+                predictor="none" if self.cfg.predictor == "none"
+                else "lorenzo")
+        fused_ok = self.cfg.use_fused
         if self.cfg.mode in ("abs", "rel"):
             pred = self._pick_predictor(x, self._abs_eb(x))
+            if fused_ok:
+                return self._compress_eb_fused(x, pred)
             if pred == "none":
                 return self._compress_eb_direct(x, word_bits)
-            if fused_ok:
-                return self._compress_eb_fused(x)
             return self._compress_eb(x, word_bits)
-        if self.cfg.mode == "fixed_ratio":
-            return self._compress_fixed_ratio(x, word_bits,
-                                              use_fused=fused_ok)
-        raise ValueError(self.cfg.mode)
-
-    def _batch_fused_ok(self, shards) -> bool:
-        """One batched fused device pass expresses: error-bounded mode,
-        Lorenzo predictor, homogeneous float32 shards."""
-        return (self.cfg.use_fused and self.cfg.mode in ("abs", "rel")
-                and self.cfg.predictor == "lorenzo"
-                and len(shards) > 0
-                and len({s.shape for s in shards}) == 1
-                and all(s.dtype == np.float32 for s in shards))
+        return self._compress_fixed_ratio(x, word_bits, use_fused=fused_ok)
 
     def compress_batch(self, shards, plan=None) -> List[CEAZCompressed]:
         """Compress a sequence of shards under this facade's policy.
 
         Args:
-          shards: sequence of arrays. Homogeneous float32 Lorenzo
-            shards (same shape, error-bounded mode) run as ONE batched
-            fused device pass; anything else — float64,
-            predictor='none'/'auto', ragged shapes, ``use_fused`` off —
-            transparently takes per-shard :meth:`compress`, which
-            itself routes ineligible inputs to the host-staged path.
+          shards: sequence of arrays. With ``cfg.use_fused``,
+            error-bounded shards are grouped by (shape, dtype, resolved
+            predictor) and every group of two or more runs as ONE
+            batched fused device pass — float64 and value-direct
+            groups included. Everything left over (ragged shapes,
+            singleton groups, fixed-ratio mode, ``use_fused`` off)
+            takes per-shard :meth:`compress`, which still routes
+            through the fused pipeline when enabled — nothing is split
+            out to per-array staged calls.
           plan: optional ``ShardingPlan``; when it carries a mesh the
             batched pass is GSPMD-sharded over its batch axes.
 
@@ -299,15 +306,34 @@ class CEAZ:
         changes the bytes. Raises as :meth:`compress`.
         """
         shards = [np.asarray(s) for s in shards]
-        if not self._batch_fused_ok(shards):
-            return [self.compress(s) for s in shards]   # staged fallback
-        from ..runtime import fused
-        return fused.batch_compress(
-            shards, self.cfg.eb, self._chunk_values(32),
-            self.cfg.block_size, offline=self.offline, plan=plan,
-            mode=self.cfg.mode, tau0=self.cfg.tau0, tau1=self.cfg.tau1,
-            adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build,
-            kernel_impl=self.cfg.kernel_impl)
+        out: List[Optional[CEAZCompressed]] = [None] * len(shards)
+        preds: dict = {}               # probe once; leftovers reuse it
+        if self.cfg.use_fused and self.cfg.mode in ("abs", "rel"):
+            groups: dict = {}
+            for i, s in enumerate(shards):
+                if s.dtype not in (np.float32, np.float64) or s.size == 0:
+                    continue        # compress() raises/handles below
+                preds[i] = self._pick_predictor(s, self._abs_eb(s))
+                groups.setdefault((s.shape, s.dtype, preds[i]),
+                                  []).append(i)
+            from ..runtime import fused
+            for (_, dtype, pred), idxs in groups.items():
+                if len(idxs) < 2:
+                    continue        # per-shard fused compress below
+                outs = fused.batch_compress(
+                    [shards[i] for i in idxs], self.cfg.eb,
+                    self._chunk_values(dtype.itemsize * 8),
+                    self.cfg.block_size, offline=self.offline, plan=plan,
+                    mode=self.cfg.mode, tau0=self.cfg.tau0,
+                    tau1=self.cfg.tau1, adaptive=self.cfg.adaptive,
+                    exact_build=self.cfg.exact_build,
+                    kernel_impl=self.cfg.kernel_impl, predictor=pred)
+                for i, c in zip(idxs, outs):
+                    out[i] = c
+        return [c if c is not None
+                else (self._compress_eb_fused(s, preds[i]) if i in preds
+                      else self.compress(s))
+                for i, (c, s) in enumerate(zip(out, shards))]
 
     def _coder(self) -> AdaptiveCoder:
         return AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
@@ -317,14 +343,26 @@ class CEAZ:
         return max(self.cfg.chunk_bytes // (word_bits // 8),
                    self.cfg.block_size)
 
-    def _compress_eb_fused(self, x: np.ndarray) -> CEAZCompressed:
+    def _compress_eb_fused(self, x: np.ndarray,
+                           predictor: str = "lorenzo") -> CEAZCompressed:
         """Policy stays here; all per-value work runs device-resident."""
         from ..runtime import fused
         return fused.compress_error_bounded(
             x, self._abs_eb(x), self.cfg.mode, self._coder(),
-            self._chunk_values(32), self.cfg.block_size,
+            self._chunk_values(x.dtype.itemsize * 8), self.cfg.block_size,
             adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build,
-            kernel_impl=self.cfg.kernel_impl)
+            kernel_impl=self.cfg.kernel_impl, predictor=predictor)
+
+    def _value_quantize(self, chunk: np.ndarray, eb: float):
+        """Per-chunk value-direct quantization, backend-selected: the
+        numpy backend keeps the float64/int64 host reference; jax and
+        pallas use the device twin (f32 quantize + `dq_center` op) the
+        fused pipeline batches — so staged backend='jax' and fused
+        value-direct outputs are bit-identical by construction."""
+        if self.cfg.backend == "numpy":
+            return dq.np_value_quantize(chunk, eb)
+        return dq.value_quantize(chunk, eb,
+                                 kernel_impl=self.cfg.kernel_impl)
 
     def _compress_eb_direct(self, x: np.ndarray,
                             word_bits: int) -> CEAZCompressed:
@@ -337,7 +375,7 @@ class CEAZ:
         chunks, lit_idx, lit_val = [], [], []
         for s in range(0, len(flat), cv):
             e = min(s + cv, len(flat))
-            codes, outlier, delta, center = dq.np_value_quantize(flat[s:e],
+            codes, outlier, delta, center = self._value_quantize(flat[s:e],
                                                                  eb)
             ch = self._encode_chunk(codes.reshape(-1), delta.reshape(-1),
                                     outlier.reshape(-1), eb, coder)
@@ -396,7 +434,8 @@ class CEAZ:
                 x, ctrl, coder, cv, self.cfg.block_size,
                 adaptive=self.cfg.adaptive,
                 exact_build=self.cfg.exact_build,
-                kernel_impl=self.cfg.kernel_impl)
+                kernel_impl=self.cfg.kernel_impl,
+                speculation=self.cfg.speculation)
         chunks, lit_idx, lit_val = [], [], []
         for s in range(0, len(flat), cv):
             e = min(s + cv, len(flat))
@@ -421,10 +460,10 @@ class CEAZ:
     def decompress(self, c: CEAZCompressed) -> np.ndarray:
         """Decode one stream under this facade's policy.
 
-        With ``cfg.use_fused``, eligible float32 Lorenzo streams run
-        the device-resident fused decode (runtime/fused_decode.py —
-        bit-identical to the staged reference); float64 and
-        value-direct streams take the host-staged path. Returns the
+        With ``cfg.use_fused``, streams of every dtype (f32/f64),
+        predictor (lorenzo/value-direct) and mode run the
+        device-resident fused decode (runtime/fused_decode.py —
+        bit-identical to the staged reference). Returns the
         reconstruction in the stream's original shape and dtype.
 
         Raises:
@@ -439,10 +478,10 @@ class CEAZ:
     def decompress_batch(self, comps) -> List[np.ndarray]:
         """Decode a sequence of streams under this facade's policy.
 
-        Eligible float32 Lorenzo streams (any mix of shapes and modes)
-        share ONE batched fused Huffman-decode pass; everything else —
-        float64, value-direct, ``use_fused`` off — transparently takes
-        the host-staged reference path, mirroring ``compress_batch``:
+        Eligible streams (any mix of shapes, dtypes, predictors and
+        modes) share ONE batched fused Huffman-decode pass; the rest —
+        empty streams, ``use_fused`` off — transparently take the
+        host-staged reference path, mirroring ``compress_batch``:
         callers never need their own eligibility split. Returns arrays
         in input order; raises the block-grain ``ValueError`` described
         on :meth:`decompress`.
@@ -485,6 +524,8 @@ class CEAZ:
         from .huffman import replay_codebooks
         self._check_block_size(c)
         out_dtype = np.dtype(c.dtype)
+        if not c.chunks:                     # empty stream: zero values
+            return np.zeros(c.shape, dtype=out_dtype)
         # decode tables are memoized per distinct codebook, not per chunk
         books: List[Codebook] = replay_codebooks(c.chunks, self.offline)
 

@@ -31,6 +31,17 @@ NUM_SYMBOLS = 2 * RADIUS
 OUTLIER_CODE = 0      # escape symbol: delta stored out-of-band
 
 
+def value_range(x: np.ndarray) -> float:
+    """max - min as a python float: the relative-bound scale. Python
+    floats make inf - inf a quiet NaN (numpy scalars warn, and repro
+    warnings are errors); NaN/zero ranges fall back to 1.0 so
+    non-finite or constant arrays still get a finite bound. Shared by
+    the facade, the rate-control calibration and the batched fused
+    path so grouping never changes the bound."""
+    vrange = float(np.max(x)) - float(np.min(x))
+    return vrange if np.isfinite(vrange) and vrange != 0.0 else 1.0
+
+
 def prequantize(x: jax.Array, eb: float) -> jax.Array:
     """q = round(x / (2*eb)) as int32 (the paper's prequantization).
 
@@ -151,12 +162,17 @@ def dequantize(delta: jax.Array, eb: float, ndim: int) -> jax.Array:
 def np_value_quantize(x: np.ndarray, eb: float):
     """-> (codes u16, outlier mask, delta int64, center int64)."""
     xf = np.asarray(x, dtype=np.float64)
-    q = np.rint(xf / (2.0 * eb))
-    q = np.clip(np.nan_to_num(q), -2.0e18, 2.0e18).astype(np.int64)
-    out_dtype = x.dtype if x.dtype in (np.float32, np.float64) else np.float32
-    recon = (q * (2.0 * eb)).astype(out_dtype).astype(np.float64)
-    err = xf - recon
-    q = q + (err > eb).astype(np.int64) - (err < -eb).astype(np.int64)
+    # non-finite inputs produce NaNs mid-computation by design (they
+    # quantize to clipped codes; comparisons against NaN are false, so
+    # the tighten step leaves q alone) — not a numerics bug to warn on
+    with np.errstate(invalid="ignore"):
+        q = np.rint(xf / (2.0 * eb))
+        q = np.clip(np.nan_to_num(q), -2.0e18, 2.0e18).astype(np.int64)
+        out_dtype = (x.dtype if x.dtype in (np.float32, np.float64)
+                     else np.float32)
+        recon = (q * (2.0 * eb)).astype(out_dtype).astype(np.float64)
+        err = xf - recon
+        q = q + (err > eb).astype(np.int64) - (err < -eb).astype(np.int64)
     center = int(np.median(q))
     delta = q - center
     code = delta + RADIUS
@@ -171,6 +187,56 @@ def np_value_dequantize(delta: np.ndarray, center: int, eb: float,
     return (q.astype(np.float64) * (2.0 * eb)).astype(dtype)
 
 
+_jit_prequantize = jax.jit(prequantize)
+
+
+@jax.jit
+def value_postquantize(q: jax.Array, center: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """delta/codes/outlier for value-direct quantization (device twin).
+
+    `center` broadcasts against `q` (a scalar for one chunk, (C, 1) for
+    a batch of chunk rows). int32 arithmetic throughout: delta can wrap
+    for |q - center| >= 2^31, exactly as the staged path's int64 delta
+    wraps when cast to the int32 escape channel — both paths wrap to
+    the same bits, and the wrap only occurs beyond the value/(2*eb)
+    ~ 2e9 envelope the f32 prequantize clip already imposes.
+    """
+    delta = q.astype(jnp.int32) - center.astype(jnp.int32)
+    code = delta + RADIUS
+    outlier = (code < 1) | (code >= NUM_SYMBOLS)
+    codes = jnp.where(outlier, OUTLIER_CODE, code).astype(jnp.uint16)
+    return codes, outlier, delta
+
+
+def value_quantize(x, eb: float, kernel_impl: str = "auto"):
+    """Device (f32/int32) twin of :func:`np_value_quantize`.
+
+    Quantizes one chunk with :func:`prequantize` (f32 arithmetic, the
+    same formula the Lorenzo fused path uses) and centres it with the
+    `dq_center` dispatch op — the device promotion of the host
+    ``np.median``. This is the value-direct reference for the jax
+    backend: the fused pipeline (runtime/fused.py) runs the identical
+    ops batched, so staged backend='jax' and fused outputs are
+    bit-identical by construction. The numpy backend keeps
+    :func:`np_value_quantize` (float64/int64 headroom) as its own
+    reference.
+
+    -> (codes u16, outlier bool, delta int32, center int) as numpy.
+    """
+    from ..kernels import dispatch  # local import: no cycle at import time
+    flat = jnp.asarray(np.asarray(x).reshape(-1), jnp.float32)
+    # eb must be a traced argument (not an eager constant): a folded
+    # constant lets XLA rewrite x/(2eb) as a reciprocal multiply, whose
+    # f32 rounding differs from the fused pass's runtime division
+    q = _jit_prequantize(flat, eb)
+    center_fn = dispatch.resolve("dq_center", kernel_impl)
+    center = center_fn(q[None, :], jnp.ones((1, q.shape[0]), bool))
+    codes, outlier, delta = value_postquantize(q, center[0])
+    return (np.asarray(codes), np.asarray(outlier), np.asarray(delta),
+            int(center[0]))
+
+
 # ---------------------------------------------------------------------------
 # Host-side (numpy) twins used by the checkpoint/restore path where we want
 # int64 headroom and no device round-trips.
@@ -178,13 +244,18 @@ def np_value_dequantize(delta: np.ndarray, center: int, eb: float,
 
 def np_dual_quantize(x: np.ndarray, eb: float, ndim: int):
     xf = np.asarray(x, dtype=np.float64)
-    q = np.rint(xf / (2.0 * eb))
-    q = np.clip(np.nan_to_num(q), -2.0e18, 2.0e18).astype(np.int64)
-    # bound-tighten against the output-dtype reconstruction (see prequantize)
-    out_dtype = x.dtype if x.dtype in (np.float32, np.float64) else np.float32
-    recon = (q * (2.0 * eb)).astype(out_dtype).astype(np.float64)
-    err = xf - recon
-    q = q + (err > eb).astype(np.int64) - (err < -eb).astype(np.int64)
+    # see np_value_quantize: NaNs mid-computation are the designed
+    # escape for non-finite inputs, not a numerics bug to warn on
+    with np.errstate(invalid="ignore"):
+        q = np.rint(xf / (2.0 * eb))
+        q = np.clip(np.nan_to_num(q), -2.0e18, 2.0e18).astype(np.int64)
+        # bound-tighten against the output-dtype reconstruction (see
+        # prequantize)
+        out_dtype = (x.dtype if x.dtype in (np.float32, np.float64)
+                     else np.float32)
+        recon = (q * (2.0 * eb)).astype(out_dtype).astype(np.float64)
+        err = xf - recon
+        q = q + (err > eb).astype(np.int64) - (err < -eb).astype(np.int64)
 
     def shift(a, axes):
         for ax in axes:

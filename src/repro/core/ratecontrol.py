@@ -51,12 +51,29 @@ class FixedRatioController:
     update is the exact inverse of the rate law; `damping` < 1 keeps the
     loop stable on fields whose histogram shape drifts (where the law is
     only locally exact).
+
+    The update moves eb on a log grid of `steps_per_octave` steps per
+    octave (the continuous exponent is rounded to the nearest grid
+    step). The grid is what makes the speculative fixed-ratio pipeline
+    (runtime/fused.py) effective: `predict_next()` forecasts the next
+    chunk's bound from the rate law anchored at the last measurement,
+    and the forecast lands on the SAME float as the sequential loop
+    whenever the predicted and measured bit-rates round to the same
+    step — small prediction error then costs nothing at all, instead of
+    a guaranteed byte-level mismatch. The grid's bit-rate granularity,
+    1/(steps_per_octave*damping) ~ 0.18 bits/value at the defaults, is
+    far below the paper's 15% ratio-accuracy envelope (Fig 13).
     """
     target_bitrate: float
     eb: float
     damping: float = 0.7
     min_eb: float = 1e-12
     max_eb: float = 1e12
+    steps_per_octave: int = 8
+    # last measurement (pre-update eb, achieved bit-rate): the anchor the
+    # rate-law forecast in predict_next() extrapolates from
+    last_eb: float | None = None
+    last_bitrate: float | None = None
 
     @classmethod
     def from_target_ratio(cls, target_ratio: float, eb0: float,
@@ -64,11 +81,39 @@ class FixedRatioController:
         return cls(target_bitrate=bitrate_from_ratio(target_ratio, word_bits),
                    eb=eb0, **kw)
 
+    def _step(self, eb: float, achieved_bitrate: float) -> float:
+        """The pure update rule shared by feedback() and predict_next():
+        bitwise-deterministic so a correct forecast replays exactly."""
+        err = achieved_bitrate - self.target_bitrate  # positive => too many bits
+        k = round(self.steps_per_octave * self.damping * err)
+        # clamp the octave shift before the pow: a pathological chunk
+        # (per-chunk overheads on a 1-value chunk) can ask for 2^3000,
+        # which overflows the float pow long before the eb clamp below
+        # would saturate it anyway
+        shift = min(max(k / self.steps_per_octave, -1000.0), 1000.0)
+        return float(np.clip(eb * 2.0 ** shift, self.min_eb, self.max_eb))
+
     def feedback(self, achieved_bitrate: float) -> float:
-        err = achieved_bitrate - self.target_bitrate      # positive => too many bits
-        self.eb = float(np.clip(self.eb * 2.0 ** (self.damping * err),
-                                self.min_eb, self.max_eb))
+        self.last_eb, self.last_bitrate = self.eb, float(achieved_bitrate)
+        self.eb = self._step(self.eb, achieved_bitrate)
         return self.eb
+
+    def predict_next(self, eb: float) -> float:
+        """Forecast the bound AFTER a chunk encoded at `eb`, without
+        consuming any feedback (pure — controller state is untouched).
+
+        The chunk's bit-rate is forecast by the rate law (Eq. 2)
+        anchored at the last measured (eb, bitrate) pair; before any
+        measurement the seed eb is assumed on-target (it was calibrated
+        to be). The speculative pipeline compares the value returned
+        here against the sequential `feedback()` chain with `==` — a
+        bitwise hit means the speculatively encoded chunk is committed.
+        """
+        if self.last_bitrate is None:
+            predicted = self.target_bitrate
+        else:
+            predicted = self.last_bitrate - float(np.log2(eb / self.last_eb))
+        return self._step(eb, predicted)
 
 
 def calibrate_eb_for_bitrate(sample: np.ndarray, target_bitrate: float,
@@ -80,11 +125,10 @@ def calibrate_eb_for_bitrate(sample: np.ndarray, target_bitrate: float,
     With iters>1, re-probes at the predicted eb (protects against the
     histogram-shape drift at very large bounds the paper notes).
     """
-    from .dualquant import np_dual_quantize  # local import to avoid cycle
+    from .dualquant import np_dual_quantize, value_range
 
     sample = np.asarray(sample)
-    vrange = float(sample.max() - sample.min()) or 1.0
-    eb = rel_eb0 * vrange
+    eb = rel_eb0 * value_range(sample)
     for _ in range(iters):
         codes, outlier, _ = np_dual_quantize(sample, eb, ndim)
         freqs = np.bincount(codes.reshape(-1), minlength=1024)

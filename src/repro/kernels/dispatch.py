@@ -32,6 +32,8 @@ Op calling conventions (all array args jax-compatible):
          cands) -> (words (C, w32) u32, block_nbits (C, nblocks) i32)
   hufdec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
          block_size) -> codes (C, NB*block_size) u16
+  dq_center(q2, valid2) -> centers (C,) i32   (value-direct per-chunk
+         centre reduction: count-aware median of each row's valid set)
 """
 from __future__ import annotations
 
@@ -128,6 +130,11 @@ def _hufdec_pallas() -> Callable:
     return ops.decode_blocks
 
 
+def _dq_center_jnp() -> Callable:
+    from .dualquant import ops
+    return ops.chunk_center
+
+
 # auto policy: on CPU and GPU the XLA-compiled jnp path wins (a Pallas
 # kernel would run interpreted there); on TPU the explicit VMEM-resident
 # kernels are the point. GPU-specialized variants (Mosaic-GPU / Triton)
@@ -136,3 +143,9 @@ register("hufenc", "jnp", _hufenc_jnp, auto_for=("cpu", "gpu"))
 register("hufenc", "pallas", _hufenc_pallas, auto_for=("tpu",))
 register("hufdec", "jnp", _hufdec_jnp, auto_for=("cpu", "gpu"))
 register("hufdec", "pallas", _hufdec_pallas, auto_for=("tpu",))
+# dq_center is a sort-based reduction XLA already compiles well on every
+# backend, so 'pallas' aliases the jnp impl — the registration keeps
+# kernel_impl='pallas' pipelines resolving, and a dedicated TPU kernel
+# can replace the alias without touching any caller.
+register("dq_center", "jnp", _dq_center_jnp, auto_for=("cpu", "gpu"))
+register("dq_center", "pallas", _dq_center_jnp, auto_for=("tpu",))

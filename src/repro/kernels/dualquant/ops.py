@@ -74,6 +74,34 @@ def stream_quantize(x: jax.Array, eb, pipelines: int = 64,
     return unflat(codes), unflat(outl).astype(bool), unflat(delta)
 
 
+@jax.jit
+def chunk_center(q2: jax.Array, valid2: jax.Array) -> jax.Array:
+    """Per-chunk centre code: count-aware median of each row's valid set.
+
+    This is the `dq_center` dispatch op — the device promotion of the
+    host ``np.median`` the staged value-direct path used. q2 (C, V)
+    int32 quantized values, valid2 (C, V) bool. Invalid (padding)
+    entries sort to the top and are excluded by indexing with the
+    per-row valid count, so a padded batched row computes the SAME
+    centre as an unpadded single-chunk row.
+
+    Tie rule for even counts: ``lo + (hi - lo) // 2`` on the two middle
+    order statistics — a deliberate, overflow-free integer variant of
+    numpy's float median (any consistent centre is a valid model; the
+    staged jax-backend twin uses this op, so both paths agree bitwise).
+    Rows with no valid entries centre at 0.
+    """
+    q2 = q2.astype(jnp.int32)
+    qm = jnp.where(valid2, q2, jnp.iinfo(jnp.int32).max)
+    s = jnp.sort(qm, axis=1)
+    m = valid2.sum(axis=1).astype(jnp.int32)
+    lo_i = jnp.maximum(m - 1, 0) // 2
+    hi_i = jnp.minimum(m // 2, q2.shape[1] - 1)
+    lo = jnp.take_along_axis(s, lo_i[:, None], axis=1)[:, 0]
+    hi = jnp.take_along_axis(s, hi_i[:, None], axis=1)[:, 0]
+    return jnp.where(m > 0, lo + (hi - lo) // 2, 0).astype(jnp.int32)
+
+
 def stream_dequantize(delta: jax.Array, eb, pipelines: int = 64):
     """Inverse of `stream_quantize`: per-row cumsum then de-scale."""
     flat = delta.reshape(-1)

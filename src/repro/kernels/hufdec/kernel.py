@@ -72,7 +72,13 @@ def _hufdec_kernel(cb_idx_ref, words_ref, nbits_ref, count_ref, sym_ref,
         out_ref[0, :, i] = jnp.where(active, sym, 0)[0]
         return cursors + jnp.where(active, ln, 0)
 
-    jax.lax.fori_loop(0, bs, body, starts)
+    # tail-block early exit: the chunk's longest block holds
+    # min(count, bs) symbols, so the walk stops there. Positions past
+    # the bound keep the zero fill below — bit-identical to the
+    # full-length loop, whose inactive lanes also wrote zeros.
+    out_ref[...] = jnp.zeros_like(out_ref)
+    upper = jnp.minimum(count, bs)
+    jax.lax.fori_loop(0, upper, body, starts)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "interpret"))

@@ -67,6 +67,13 @@ def decode_blocks(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
         return cursors, out
 
     out0 = jnp.zeros((block_size, C, NB), jnp.uint16)
-    _, out = jax.lax.fori_loop(0, block_size, body, (starts, out0))
+    # tail-block early exit: no lane decodes past the largest per-block
+    # count, so the walk stops there — positions beyond it keep the
+    # zero-initialized padding, bit-identical to the full-length loop
+    # (every lane is inactive for those i). Pays off whenever whole
+    # chunks are shorter than the block grain (short tail chunks,
+    # size-1 streams).
+    upper = jnp.minimum(jnp.max(counts_b), block_size)
+    _, out = jax.lax.fori_loop(0, upper, body, (starts, out0))
     # (pos, C, NB) -> (C, NB, pos): symbol s of block b sits at b*bs + s
     return out.transpose(1, 2, 0).reshape(C, NB * block_size)

@@ -26,15 +26,25 @@ streaming structure (and cuSZ's fused GPU kernels):
 Bit-exactness contract: given the same quantization backend, the fused
 path produces payloads (words, block_nbits, outliers, literals)
 BIT-IDENTICAL to ``core.ceaz.CEAZ`` with ``use_fused=False,
-backend='jax'`` — enforced by tests/test_fused.py. The device bitstream
-is packed in uint32 words (jax runs without 64-bit types by default);
-``_u32_to_u64`` folds pairs into the uint64 MSB-first wire layout of
-``core.huffman.encode``.
+backend='jax'`` — enforced by tests/test_fused.py and the full-grid
+property suite. The device bitstream is packed in uint32 words (jax
+runs without 64-bit types by default); ``_u32_to_u64`` folds pairs into
+the uint64 MSB-first wire layout of ``core.huffman.encode``.
 
-Scope: float32 inputs, Lorenzo predictor, abs/rel/fixed_ratio modes. The
-facade falls back to the staged path for float64 and value-direct
-(predictor='none') compression, where the reference semantics are
-float64-host-side by design.
+Scope: the whole compression matrix — float32 AND float64 inputs,
+Lorenzo and value-direct (predictor='none') prediction, abs/rel/
+fixed_ratio modes. Float64 inputs quantize through the same f32 device
+pass the jax staged backend uses; the float64 error-bound guarantee is
+restored by the literal escape channel, whose check replays the exact
+float64 formula on the host. Value-direct centres each chunk on a
+device median (the `dq_center` dispatch op). In fixed-ratio mode the
+eb feedback loop runs speculatively: windows of W chunks quantize in
+one vmapped device pass against rate-law-predicted bounds, the exact
+feedback chain is replayed on the host from pass-1 summaries alone,
+and only chunks whose predicted eb matched bitwise are committed —
+``speculation='off'`` keeps the sequential loop as the byte-identical
+oracle. Only ragged-shape batches remain outside the fused path (see
+docs/ARCHITECTURE.md).
 """
 from __future__ import annotations
 
@@ -218,6 +228,9 @@ class _Pass1:
     outl_host: Optional[np.ndarray] = None
     delta_host: Optional[np.ndarray] = None
     q_host: Optional[np.ndarray] = None
+    # value-direct (predictor='none'): per-chunk centre codes
+    predictor: str = "lorenzo"
+    centers: Optional[np.ndarray] = None
 
 
 def _host_hists(codes_host: np.ndarray, n: int) -> np.ndarray:
@@ -250,6 +263,63 @@ def _run_pass1(work: jnp.ndarray, eb: float, ndim: int, chunk_values: int,
                   False, codes_host=codes_host, q_host=np.asarray(q))
 
 
+# ---------------------------------------------------------------------------
+# Pass 1, value-direct flavour (predictor='none')
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_chunks", "chunk_values"))
+def _value_prequantize(work, eb, n_chunks, chunk_values):
+    """flat work (f32) -> (q2, valid2) padded chunk rows (elementwise
+    quantization only; centring happens after the `dq_center` op)."""
+    flat = work.reshape(-1)
+    n = flat.shape[0]
+    q = core_dq.prequantize(flat, eb)
+    pad = n_chunks * chunk_values - n
+    valid = jnp.arange(n_chunks * chunk_values, dtype=jnp.int32) < n
+    q2 = jnp.pad(q, (0, pad)).reshape(n_chunks, chunk_values)
+    return q2, valid.reshape(n_chunks, chunk_values)
+
+
+@jax.jit
+def _value_finalize(q2, centers, valid2):
+    """centre-relative codes/outliers/deltas; padded entries code to 0
+    so the histogram scatter stays in range."""
+    codes2, outl2, delta2 = core_dq.value_postquantize(q2, centers[:, None])
+    codes2 = jnp.where(valid2, codes2, jnp.uint16(0)).astype(jnp.int32)
+    return codes2, outl2, delta2
+
+
+def _run_value_pass1(work: jnp.ndarray, eb: float, chunk_values: int,
+                     stats_on_device: Optional[bool] = None,
+                     kernel_impl: str = "auto") -> _Pass1:
+    """Value-direct twin of :func:`_run_pass1`: same _Pass1 contract,
+    with per-chunk device centre codes instead of Lorenzo prediction.
+    The integer field the literal check replays is q itself (the
+    reconstruction is q * 2eb, no prefix sum)."""
+    if stats_on_device is None:
+        stats_on_device = _default_stats_on_device()
+    n = int(work.size)
+    n_chunks, _ = chunk_layout(n, chunk_values)
+    q2, valid2 = _value_prequantize(work, eb, n_chunks, chunk_values)
+    centers = dispatch.resolve("dq_center", kernel_impl)(q2, valid2)
+    codes2, outl2, delta2 = _value_finalize(q2, centers, valid2)
+    q = q2.reshape(-1)[:n]
+    centers_np = np.asarray(centers).astype(np.int64)
+    if stats_on_device:
+        k_lit = min(n, max(256, n // 256))
+        hists, lit_idx, lit_q, lit_count = _device_stats(
+            codes2, valid2, q, work.reshape(-1), eb, k_lit)
+        return _Pass1(codes2, outl2, delta2, valid2, q, np.asarray(hists),
+                      n, n_chunks, chunk_values, True,
+                      lit_idx=lit_idx, lit_q=lit_q, lit_count=lit_count,
+                      predictor="none", centers=centers_np)
+    codes_host = np.asarray(codes2)
+    return _Pass1(codes2, outl2, delta2, valid2, q,
+                  _host_hists(codes_host, n), n, n_chunks, chunk_values,
+                  False, codes_host=codes_host, q_host=np.asarray(q),
+                  predictor="none", centers=centers_np)
+
+
 def _literals(p1: _Pass1, x_flat: np.ndarray, eb: float, ndim: int,
               work_shape) -> Tuple[np.ndarray, np.ndarray]:
     """Exact literal set (identical to the staged float64 check).
@@ -257,10 +327,13 @@ def _literals(p1: _Pass1, x_flat: np.ndarray, eb: float, ndim: int,
     Host-stats path: direct dense check on the snapshot. Device-stats
     path: replay the float64 formula on the device's candidate positions
     only (dense fallback when candidates overflow capacity). Values are
-    gathered from the caller's ORIGINAL array."""
+    gathered from the caller's ORIGINAL array, and the reconstruction is
+    rounded through the ORIGINAL dtype (f32 or f64) exactly as the
+    staged reference's dequantize does."""
+    out_dtype = x_flat.dtype
     if not p1.stats_on_device:
         q = p1.q_host.astype(np.int64)
-        rec = (q.astype(np.float64) * (2.0 * eb)).astype(np.float32)
+        rec = (q.astype(np.float64) * (2.0 * eb)).astype(out_dtype)
         idx = np.flatnonzero(
             np.abs(rec.astype(np.float64) - x_flat.astype(np.float64)) > eb
         ).astype(np.int64)
@@ -269,14 +342,19 @@ def _literals(p1: _Pass1, x_flat: np.ndarray, eb: float, ndim: int,
     if count <= p1.lit_idx.shape[0]:
         idx = np.asarray(p1.lit_idx[:count]).astype(np.int64)
         q = np.asarray(p1.lit_q[:count]).astype(np.int64)
-        rec = (q.astype(np.float64) * (2.0 * eb)).astype(np.float32)
+        rec = (q.astype(np.float64) * (2.0 * eb)).astype(out_dtype)
         viol = (np.abs(rec.astype(np.float64)
                        - x_flat[idx].astype(np.float64)) > eb)
         idx = idx[viol]
     else:       # candidate capacity overflow: exact dense pass on the host
-        delta = np.asarray(p1.delta2).reshape(-1)[:p1.n]
-        rec = core_dq.np_dequantize(delta.reshape(work_shape), eb, ndim,
-                                    dtype=np.float32).reshape(-1)
+        if p1.predictor == "none":
+            delta = np.asarray(p1.delta2).astype(np.int64)
+            q = (delta + p1.centers[:, None]).reshape(-1)[:p1.n]
+            rec = (q.astype(np.float64) * (2.0 * eb)).astype(out_dtype)
+        else:
+            delta = np.asarray(p1.delta2).reshape(-1)[:p1.n]
+            rec = core_dq.np_dequantize(delta.reshape(work_shape), eb, ndim,
+                                        dtype=out_dtype).reshape(-1)
         idx = np.flatnonzero(
             np.abs(rec.astype(np.float64) - x_flat.astype(np.float64)) > eb
         ).astype(np.int64)
@@ -344,26 +422,35 @@ def _k_outlier(chunk_values: int) -> int:
     return min(chunk_values, max(1024, chunk_values // 8))
 
 
-def _encode_all(p1: _Pass1, decisions, block_size: int,
-                kernel_impl: str = "auto"):
-    """Pass 2 for one array: batched encode+pack plus outlier escapes.
-
-    The exact per-chunk payload size is hist . lengths — free on the
-    host — so the traced pack is provisioned for the real bit-rate.
-    `kernel_impl` selects the gather-pack implementation through the
-    kernel-dispatch registry. Returns (words_np, block_nbits_np, totals,
-    outliers)."""
+def _encode_rows(hists: np.ndarray, codes2, valid2, chunk_values: int,
+                 decisions, block_size: int, kernel_impl: str):
+    """The shared pass-2 core: provision the traced pack for the exact
+    bit-rate (per-chunk payload size is hist . lengths — free on the
+    host) and run the gather-pack through the kernel-dispatch registry.
+    One chunk row per decision; every pass-2 caller (single array,
+    speculative window, shard batch) funnels through here so the
+    w32/cands provisioning policy cannot diverge between paths.
+    Returns (words_np, block_nbits_np, totals)."""
     lengths_np, cwords_np = _codebook_tables(decisions)
-    totals = np.einsum("cs,cs->c", p1.hists.astype(np.int64),
+    totals = np.einsum("cs,cs->c", hists.astype(np.int64),
                        lengths_np.astype(np.int64))
-    w32 = _w32_bucket(totals, p1.chunk_values)
+    w32 = _w32_bucket(totals, chunk_values)
     cands = _cand_window(lengths_np[lengths_np > 0].min())
     encode_pack = dispatch.resolve("hufenc", kernel_impl)
     words, block_nbits = encode_pack(
-        p1.codes2, p1.valid2, jnp.asarray(lengths_np),
-        jnp.asarray(cwords_np), block_size, w32, cands)
-    return (np.asarray(words), np.asarray(block_nbits), totals,
-            _outliers(p1))
+        codes2, valid2, jnp.asarray(lengths_np), jnp.asarray(cwords_np),
+        block_size, w32, cands)
+    return np.asarray(words), np.asarray(block_nbits), totals
+
+
+def _encode_all(p1: _Pass1, decisions, block_size: int,
+                kernel_impl: str = "auto"):
+    """Pass 2 for one array: batched encode+pack plus outlier escapes.
+    Returns (words_np, block_nbits_np, totals, outliers)."""
+    words_np, nbits_np, totals = _encode_rows(
+        p1.hists, p1.codes2, p1.valid2, p1.chunk_values, decisions,
+        block_size, kernel_impl)
+    return words_np, nbits_np, totals, _outliers(p1)
 
 
 def _assemble_chunks(p1: _Pass1, words_np, nbits_np, totals, outliers,
@@ -384,7 +471,8 @@ def _assemble_chunks(p1: _Pass1, words_np, nbits_np, totals, outliers,
             codebook_lengths=(decision.codebook.lengths.copy()
                               if decision.stored_codebook else None),
             codebook_id=decision.codebook.id,
-            outlier_idx=oi, outlier_delta=od))
+            outlier_idx=oi, outlier_delta=od,
+            center=(int(p1.centers[i]) if p1.centers is not None else 0)))
     return chunks
 
 
@@ -397,22 +485,33 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
                            block_size: int, adaptive: bool = True,
                            exact_build: bool = False,
                            stats_on_device: Optional[bool] = None,
-                           kernel_impl: str = "auto"):
-    """Fused abs/rel compression of a float32 array (Lorenzo predictor).
+                           kernel_impl: str = "auto",
+                           predictor: str = "lorenzo"):
+    """Fused abs/rel compression of a float array (any dtype/predictor).
 
     Returns a CEAZCompressed bit-compatible with the staged jax-backend
-    reference. The array is quantized ONCE (native-rank Lorenzo); the
-    code stream is then cut into chunks for the adaptive coder.
+    reference. With the Lorenzo predictor the array is quantized ONCE
+    (native-rank Lorenzo) and the code stream is then cut into chunks
+    for the adaptive coder; value-direct (predictor='none') quantizes
+    each value against its chunk's device-computed centre code. Float64
+    inputs quantize through the same f32 device pass (the staged jax
+    backend's semantics); the float64 bound is restored by the literal
+    channel.
     """
     from ..core.ceaz import CEAZCompressed
-    ndim = min(x.ndim, 3)
-    work_shape = x.shape if x.ndim <= 3 else (-1,) + x.shape[-2:]
-    work = jnp.asarray(x.reshape(work_shape), jnp.float32)
     # capping at the stream length keeps chunk boundaries identical and
     # avoids padding the whole pipeline up to a chunk nothing fills
     chunk_values = max(1, min(chunk_values, int(x.size)))
-
-    p1 = _run_pass1(work, eb, ndim, chunk_values, stats_on_device)
+    if predictor == "none":
+        ndim = 1
+        work = jnp.asarray(x.reshape(-1), jnp.float32)
+        p1 = _run_value_pass1(work, eb, chunk_values, stats_on_device,
+                              kernel_impl)
+    else:
+        ndim = min(x.ndim, 3)
+        work_shape = x.shape if x.ndim <= 3 else (-1,) + x.shape[-2:]
+        work = jnp.asarray(x.reshape(work_shape), jnp.float32)
+        p1 = _run_pass1(work, eb, ndim, chunk_values, stats_on_device)
     decisions = _policy(p1.hists, coder, adaptive, exact_build)
     enc = _encode_all(p1, decisions, block_size, kernel_impl)
     chunks = _assemble_chunks(p1, *enc, eb, decisions, block_size)
@@ -420,26 +519,186 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
     return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
                           mode=mode, chunks=chunks,
                           word_bits=x.dtype.itemsize * 8,
+                          predictor=predictor,
                           literal_idx=lit_idx, literal_val=lit_val)
+
+
+def _spec_window(speculation) -> int:
+    """Resolve the speculation knob: 'off' -> 1 (the sequential oracle
+    loop), 'auto' -> 8, an int >= 1 -> that window size."""
+    if speculation == "off":
+        return 1
+    if speculation == "auto":
+        return 8
+    if isinstance(speculation, int) and not isinstance(speculation, bool) \
+            and speculation >= 1:
+        return int(speculation)
+    raise ValueError(
+        f"speculation must be 'off', 'auto' or an int >= 1, "
+        f"got {speculation!r}")
+
+
+@jax.jit
+def _outlier_counts(outl3, valid3):
+    """Exact per-chunk escape counts (the feedback replay needs them
+    before pass 2 runs)."""
+    return jnp.sum(outl3 & valid3, axis=(1, 2), dtype=jnp.int32)
+
+
+def _chunk_total_bits(hist: np.ndarray, decision, n_outliers: int,
+                      nblocks: int) -> int:
+    """CompressedChunk.total_bits() computed from pass-1 summaries alone
+    — the payload is exactly hist . lengths, so the eb feedback chain
+    can be replayed BEFORE any chunk is actually encoded."""
+    from ..core.ceaz import BLOCK_COUNT_BITS, CHUNK_HEADER_BITS, OUTLIER_BITS
+    bits = int(np.dot(hist.astype(np.int64),
+                      decision.codebook.lengths.astype(np.int64)))
+    bits += CHUNK_HEADER_BITS + BLOCK_COUNT_BITS * nblocks
+    bits += OUTLIER_BITS * n_outliers
+    if decision.stored_codebook:
+        bits += 5 * NUM_SYMBOLS
+    return bits
+
+
+def _window_pass1(seg2: np.ndarray, ebs, stats_on_device: bool):
+    """Vmapped pass 1 over a window of full-size fixed-ratio chunks,
+    each row an independent 1-D stream with its own (speculative) eb.
+
+    Returns (p1s, ocounts, codes_all, valid_all): one _Pass1 per chunk,
+    the exact per-chunk outlier counts the feedback replay needs, and
+    the stacked (w, cv) device code/valid arrays pass 2 consumes. On
+    the host-stats path the per-chunk _Pass1 records carry only numpy
+    snapshot rows (no device fields): eager per-row device slicing is
+    pure dispatch overhead there, and everything downstream reads the
+    snapshots or the stacked arrays."""
+    w, cv = seg2.shape
+    work = jnp.asarray(seg2)
+    ebs_j = jnp.asarray(ebs, jnp.float32)
+    qp = jax.vmap(lambda wk, e: _quantize_pass(wk, e, 1, 1, cv))(work, ebs_j)
+    codes3, outl3, delta3, valid3, q2 = qp
+    ocounts = np.array(_outlier_counts(outl3, valid3))   # writable: repairs
+    codes_all = codes3.reshape(w, cv)
+    valid_all = valid3.reshape(w, cv)
+    p1s: List[_Pass1] = []
+    if stats_on_device:
+        k_lit = min(cv, max(256, cv // 256))
+        st = jax.vmap(lambda c, v, q, wk, e: _device_stats(
+            c, v, q, wk, e, k_lit))(codes3, valid3, q2, work, ebs_j)
+        hists = np.asarray(st[0])
+        for j in range(w):
+            p1s.append(_Pass1(codes3[j], outl3[j], delta3[j], valid3[j],
+                              q2[j], hists[j], cv, 1, cv, True,
+                              lit_idx=st[1][j], lit_q=st[2][j],
+                              lit_count=st[3][j]))
+    else:
+        codes_host = np.asarray(codes3)
+        outl_host = np.asarray(outl3)
+        delta_host = np.asarray(delta3)
+        q_host = np.asarray(q2)
+        for j in range(w):
+            p1s.append(_Pass1(None, None, None, None, None,
+                              _host_hists(codes_host[j], cv), cv, 1,
+                              cv, False, codes_host=codes_host[j],
+                              outl_host=outl_host[j],
+                              delta_host=delta_host[j], q_host=q_host[j]))
+    return p1s, ocounts, codes_all, valid_all
+
+
+def _encode_window(hists: Sequence[np.ndarray], codes_all, valid_all,
+                   decisions, block_size: int, kernel_impl: str,
+                   chunk_values: int):
+    """One batched pass 2 over a window's chunks (stacked rows)."""
+    return _encode_rows(np.concatenate(hists), codes_all, valid_all,
+                        chunk_values, decisions, block_size, kernel_impl)
 
 
 def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
                          chunk_values: int, block_size: int,
                          adaptive: bool = True, exact_build: bool = False,
                          stats_on_device: Optional[bool] = None,
-                         kernel_impl: str = "auto"):
+                         kernel_impl: str = "auto",
+                         speculation="auto"):
     """Fused fixed-ratio compression (1-D stream of chunks).
 
-    The eb feedback loop is inherently sequential across chunks (chunk
-    i's bound depends on chunk i-1's achieved bit-rate), so chunks run
-    one at a time — but each chunk is still two fused device calls
-    instead of a four-stage host round-trip.
+    The eb feedback loop is sequential across chunks (chunk i's bound
+    depends on chunk i-1's achieved bit-rate), but the loop state can
+    be replayed from pass-1 summaries alone: a chunk's total bits are
+    exactly ``hist . lengths`` plus per-chunk overheads, all known
+    before pass 2 runs. So the pipeline SPECULATES: it forecasts the
+    next W-1 bounds with the controller's rate-law predictor, runs one
+    vmapped pass 1 over the whole window, then replays the exact
+    feedback chain on the host — every chunk whose forecast landed on
+    the exact sequential eb (the controller's quantized update grid
+    makes that the common case) keeps its speculative quantization; a
+    mispredicted chunk is requantized ALONE at its exact bound, so only
+    the misses re-encode and the rest of the window's speculative work
+    survives. The whole window then runs one batched pass 2. The
+    emitted stream is byte-identical to the sequential loop
+    (``speculation='off'``) on EVERY input — a miss costs one extra
+    single-chunk device pass, never different bytes.
+
+    `speculation`: 'off' (sequential oracle), 'auto' (window 8), or an
+    explicit window size >= 1.
     """
     from ..core.ceaz import CEAZCompressed
     flat = x.reshape(-1)
     n = len(flat)
+    if stats_on_device is None:
+        stats_on_device = _default_stats_on_device()
+    window = _spec_window(speculation)
     chunks, lit_idx_parts, lit_val_parts = [], [], []
-    for s in range(0, n, chunk_values):
+    pos = 0                              # position in full-size chunks
+    n_full = n // chunk_values
+    while window > 1 and n_full - pos >= 2:
+        w = min(window, n_full - pos)
+        ebs = [float(ctrl.eb)]           # window head is always exact
+        for _ in range(w - 1):
+            ebs.append(ctrl.predict_next(ebs[-1]))
+        seg2 = np.asarray(flat[pos * chunk_values:(pos + w) * chunk_values],
+                          np.float32).reshape(w, chunk_values)
+        p1s, ocounts, codes_all, valid_all = _window_pass1(
+            seg2, ebs, stats_on_device)
+        # replay the exact sequential feedback chain from the summaries;
+        # a mispredicted chunk requantizes alone at its exact bound
+        decisions, fed_bits, repaired = [], [], {}
+        for j in range(w):
+            if j > 0 and ebs[j] != float(ctrl.eb):
+                ebs[j] = float(ctrl.eb)
+                p1s[j] = _run_pass1(jnp.asarray(seg2[j]), ebs[j], 1,
+                                    chunk_values, stats_on_device)
+                # exact escape count from the (cached) outlier extraction
+                ocounts[j] = len(_outliers(p1s[j])[0][0])
+                repaired[j] = p1s[j].codes2
+            d = _policy(p1s[j].hists, coder, adaptive, exact_build)[0]
+            nblocks = max(1, -(-chunk_values // block_size))
+            bits = _chunk_total_bits(p1s[j].hists[0], d, int(ocounts[j]),
+                                     nblocks)
+            ctrl.feedback(bits / chunk_values)
+            decisions.append(d)
+            fed_bits.append(bits)
+        if repaired:        # one batched row replacement, not per miss
+            codes_all = codes_all.at[jnp.asarray(list(repaired))].set(
+                jnp.concatenate(list(repaired.values())))
+        words_np, nbits_np, totals = _encode_window(
+            [p.hists for p in p1s], codes_all, valid_all, decisions,
+            block_size, kernel_impl, chunk_values)
+        for j in range(w):
+            ch = _assemble_chunks(p1s[j], words_np[j:j + 1],
+                                  nbits_np[j:j + 1], totals[j:j + 1],
+                                  _outliers(p1s[j]), ebs[j],
+                                  [decisions[j]], block_size)[0]
+            # the replayed feedback must mirror the emitted chunk exactly
+            assert ch.total_bits() == fed_bits[j]
+            s = (pos + j) * chunk_values
+            li, lv = _literals(p1s[j], flat[s:s + chunk_values], ebs[j], 1,
+                               (chunk_values,))
+            lit_idx_parts.append(li + s)
+            lit_val_parts.append(lv)
+            chunks.append(ch)
+        pos += w
+    # sequential tail: remaining full chunks (speculation off, or one
+    # full chunk left) plus the final partial chunk
+    for s in range(pos * chunk_values, n, chunk_values):
         e = min(s + chunk_values, n)
         eb = float(ctrl.eb)
         seg = jnp.asarray(flat[s:e], jnp.float32)
@@ -486,15 +745,19 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
                    tau0: Optional[float] = None,
                    tau1: Optional[float] = None,
                    adaptive: bool = True, exact_build: bool = False,
-                   kernel_impl: str = "auto"):
-    """Compress many same-shape float32 shards through ONE pair of fused
-    device passes, optionally sharded over the mesh's batch axes.
+                   kernel_impl: str = "auto",
+                   predictor: str = "lorenzo"):
+    """Compress many same-shape, same-dtype shards through ONE pair of
+    fused device passes, optionally sharded over the mesh's batch axes.
 
     Each shard keeps its own AdaptiveCoder stream (policy sequences match
     per-shard staged compression); the per-value work for all shards runs
     as a single stacked trace, which GSPMD splits across devices when
     `plan` carries a mesh — the paper's N independent pipelines realized
-    over a device mesh instead of FPGA lanes.
+    over a device mesh instead of FPGA lanes. Float64 shards quantize
+    through the f32 device pass (literal channel restores the f64
+    bound); `predictor='none'` runs the batched value-direct pass with
+    per-chunk device centres.
     """
     from ..core.ceaz import CEAZCompressed
     from ..core.codebook import default_offline_codebook
@@ -504,6 +767,9 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
         offline = default_offline_codebook()
     if len({s.shape for s in shards}) != 1:
         raise ValueError("batch_compress requires same-shape shards")
+    if len({s.dtype for s in shards}) != 1:
+        raise ValueError("batch_compress requires same-dtype shards")
+    word_bits = shards[0].dtype.itemsize * 8
     stack_np = np.stack([np.asarray(s, np.float32) for s in shards])
     dp = 1
     if plan is not None and getattr(plan, "mesh", None) is not None:
@@ -513,21 +779,37 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
     else:
         stacked = jnp.asarray(stack_np)
     nshards = stacked.shape[0]
-    ndim = min(stacked.ndim - 1, 3)
-    ebs = []
-    for s in shards:
-        vrange = float(np.max(s) - np.min(s)) or 1.0
-        ebs.append(eb_rel * vrange if mode == "rel" else eb_rel)
+    ndim = 1 if predictor == "none" else min(stacked.ndim - 1, 3)
+    ebs = [eb_rel * core_dq.value_range(s) if mode == "rel" else eb_rel
+           for s in shards]
 
     # pass 1 vmapped over the shard axis (per-shard eb)
     n = int(stacked[0].size)
     chunk_values = max(1, min(chunk_values, n))
     n_chunks, _ = chunk_layout(n, chunk_values)
-    work = stacked.reshape((nshards,) + _work_shape(stacked.shape[1:]))
     ebs_j = jnp.asarray(ebs, jnp.float32)
-    qp = jax.vmap(lambda w, e: _quantize_pass(w, e, ndim, n_chunks,
-                                              chunk_values))(work, ebs_j)
-    codes3, outl3, delta3, valid3, q2 = qp
+    centers2 = None
+    if predictor == "none":
+        work = stacked.reshape(nshards, -1)
+        q3, valid3 = jax.vmap(
+            lambda w, e: _value_prequantize(w, e, n_chunks, chunk_values)
+        )(work, ebs_j)
+        center_fn = dispatch.resolve("dq_center", kernel_impl)
+        centers2 = jax.vmap(center_fn)(q3, valid3)
+        codes3, outl3, delta3 = jax.vmap(_value_finalize)(q3, centers2,
+                                                          valid3)
+        q2 = q3.reshape(nshards, -1)[:, :n]
+        centers_np = np.asarray(centers2).astype(np.int64)
+    else:
+        work = stacked.reshape((nshards,) + _work_shape(stacked.shape[1:]))
+        qp = jax.vmap(lambda w, e: _quantize_pass(w, e, ndim, n_chunks,
+                                                  chunk_values))(work, ebs_j)
+        codes3, outl3, delta3, valid3, q2 = qp
+
+    def _p1_extra(si):
+        if predictor == "none":
+            return dict(predictor="none", centers=centers_np[si])
+        return {}
 
     p1s: List[_Pass1] = []
     if stats_on_device:
@@ -540,7 +822,8 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
             p1s.append(_Pass1(codes3[si], outl3[si], delta3[si],
                               valid3[si], q2[si], hists[si], n, n_chunks,
                               chunk_values, True, lit_idx=st[1][si],
-                              lit_q=st[2][si], lit_count=st[3][si]))
+                              lit_q=st[2][si], lit_count=st[3][si],
+                              **_p1_extra(si)))
     else:
         codes_host = np.asarray(codes3)
         outl_host = np.asarray(outl3)
@@ -554,7 +837,7 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
                               codes_host=codes_host[si],
                               outl_host=outl_host[si],
                               delta_host=delta_host[si],
-                              q_host=q_host[si]))
+                              q_host=q_host[si], **_p1_extra(si)))
 
     # host policy per shard, then ONE batched pass-2 over shards*chunks
     from ..core.codebook import DEFAULT_TAU0, DEFAULT_TAU1
@@ -565,20 +848,11 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
             DEFAULT_TAU1 if tau1 is None else tau1, exact_build)
         all_dec.append(_policy(p1s[si].hists, coder, adaptive=adaptive,
                                exact_build=exact_build))
-    tbls = [_codebook_tables(d) for d in all_dec]
-    lengths_np = np.concatenate([t[0] for t in tbls])
-    cwords_np = np.concatenate([t[1] for t in tbls])
-    hists_all = np.concatenate([p.hists for p in p1s]).astype(np.int64)
-    totals = np.einsum("cs,cs->c", hists_all, lengths_np.astype(np.int64))
-    w32 = _w32_bucket(totals, chunk_values)
-    cands = _cand_window(lengths_np[lengths_np > 0].min())
     flat2 = lambda a: a.reshape((nshards * n_chunks,) + a.shape[2:])
-    encode_pack = dispatch.resolve("hufenc", kernel_impl)
-    words, block_nbits = encode_pack(
-        flat2(codes3), flat2(valid3), jnp.asarray(lengths_np),
-        jnp.asarray(cwords_np), block_size, w32, cands)
-    words_np = np.asarray(words)
-    nbits_np = np.asarray(block_nbits)
+    words_np, nbits_np, totals = _encode_rows(
+        np.concatenate([p.hists for p in p1s]), flat2(codes3),
+        flat2(valid3), chunk_values,
+        [d for ds in all_dec for d in ds], block_size, kernel_impl)
 
     outs = []
     for si, s in enumerate(shards):
@@ -586,12 +860,12 @@ def batch_compress(shards: Sequence[np.ndarray], eb_rel: float,
         chunks = _assemble_chunks(p1s[si], words_np[sl], nbits_np[sl],
                                   totals[sl], _outliers(p1s[si]), ebs[si],
                                   all_dec[si], block_size)
-        x_flat = np.asarray(s, np.float32).reshape(-1)
+        x_flat = np.asarray(s).reshape(-1)
         lit_idx, lit_val = _literals(p1s[si], x_flat, ebs[si], ndim,
                                      _work_shape(stacked.shape[1:]))
         outs.append(CEAZCompressed(
-            shape=s.shape, dtype="float32", ndim=ndim, mode=mode,
-            chunks=chunks, word_bits=32,
+            shape=s.shape, dtype=str(s.dtype), ndim=ndim, mode=mode,
+            chunks=chunks, word_bits=word_bits, predictor=predictor,
             literal_idx=lit_idx, literal_val=lit_val))
     return outs
 

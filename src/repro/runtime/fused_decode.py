@@ -30,10 +30,14 @@ cursor arithmetic on the u32 reinterpretation of the u64 wire words);
 the host multiply then replays the staged float64 formula on the exact
 integer field.
 
-Scope mirrors the fused encoder: float32 Lorenzo streams. Float64 (int64
-reconstruction headroom) and value-direct (predictor='none') streams
-fall back to the staged host path inside the ``CEAZ.decompress_batch``
-facade — callers never need their own eligibility split.
+Scope mirrors the fused encoder: float32 AND float64 streams, Lorenzo
+and value-direct (predictor='none') prediction. Value-direct chunks add
+their per-chunk centre code on device (no prefix sum); float64 streams
+differ only in the host multiply's output dtype. The integer envelope
+is the encoder's: reconstruction codes |q| <= ~2e9 fit the device's
+int32 walk (the f32 quantize pass clips there) — a hypothetical stream
+quantized outside that envelope (host-numpy encode at an absurdly tight
+bound) is the one case the staged decoder must handle instead.
 """
 from __future__ import annotations
 
@@ -94,6 +98,15 @@ def _inverse_1d_chunks(codes2, oidx2, odelta2):
     return jnp.cumsum(delta2, axis=1, dtype=jnp.int32)
 
 
+@jax.jit
+def _inverse_value_chunks(codes2, oidx2, odelta2, centers):
+    """value-direct: per-chunk centre add, no prefix sum. int32 adds
+    wrap exactly inversely to the encoder's wrapped deltas, so q is
+    recovered bit-exactly within the quantizer's +-2e9 envelope."""
+    delta2 = _scatter_outliers(codes2, oidx2, odelta2)
+    return delta2 + centers[:, None].astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Host assembly
 # ---------------------------------------------------------------------------
@@ -121,10 +134,12 @@ def _bucket_words(n: int) -> int:
 
 
 def fused_decode_ok(c, offline: Codebook) -> bool:
-    """Scope mirrors the fused encoder: float32 Lorenzo streams whose
-    codebooks pack at the standard length limit."""
-    return (getattr(c, "predictor", "lorenzo") == "lorenzo"
-            and np.dtype(c.dtype) == np.float32
+    """Scope mirrors the fused encoder: float32/float64 streams with
+    Lorenzo or value-direct prediction, codebooks packed at the
+    standard length limit. Empty streams (no chunks) decode trivially
+    on the staged path."""
+    return (getattr(c, "predictor", "lorenzo") in ("lorenzo", "none")
+            and np.dtype(c.dtype) in (np.float32, np.float64)
             and c.mode in ("abs", "rel", "fixed_ratio")
             and len(c.chunks) > 0
             and offline.max_len == MAX_CODE_BITS)
@@ -226,6 +241,15 @@ def decompress_one(codes_rows, c) -> np.ndarray:
     n = int(c.n_values)
     oidx, odelta = _padded_outliers(c.chunks)
     rows = codes_rows[:, :cv]
+    if getattr(c, "predictor", "lorenzo") == "none":
+        # value-direct: per-chunk centre add on device, no prefix sum
+        centers = jnp.asarray([ch.center for ch in c.chunks], jnp.int32)
+        q2 = np.asarray(_inverse_value_chunks(rows, jnp.asarray(oidx),
+                                              jnp.asarray(odelta), centers))
+        parts = [q2[i, :ch.n_values] for i, ch in enumerate(c.chunks)]
+        ebs = np.repeat([2.0 * ch.eb for ch in c.chunks],
+                        [ch.n_values for ch in c.chunks])
+        return _finish_host(c, np.concatenate(parts), ebs)
     if c.mode in ("abs", "rel"):
         q = np.asarray(_inverse_nd(rows, jnp.asarray(oidx),
                                    jnp.asarray(odelta), c.ndim, n,

@@ -16,6 +16,34 @@ def rng():
     return np.random.default_rng(0)
 
 
+def assert_streams_bit_identical(cs, cf):
+    """Every field of two CEAZCompressed streams must match bitwise —
+    the staged-vs-fused (and sequential-vs-speculative) contract shared
+    by the full-grid, property and edge-case suites."""
+    assert cs.mode == cf.mode and cs.predictor == cf.predictor
+    assert cs.dtype == cf.dtype and cs.word_bits == cf.word_bits
+    assert cs.shape == cf.shape and cs.ndim == cf.ndim
+    assert len(cs.chunks) == len(cf.chunks)
+    for i, (a, b) in enumerate(zip(cs.chunks, cf.chunks)):
+        ctx = f"chunk {i}"
+        assert a.n_values == b.n_values, ctx
+        # eb goes NaN on all-NaN inputs (vrange is NaN); bitwise-equal
+        assert a.eb == b.eb or (np.isnan(a.eb) and np.isnan(b.eb)), ctx
+        assert a.action == b.action, ctx
+        assert a.center == b.center, ctx
+        assert a.codebook_id == b.codebook_id, ctx
+        assert np.array_equal(a.words, b.words), ctx
+        assert np.array_equal(a.block_nbits, b.block_nbits), ctx
+        assert np.array_equal(a.outlier_idx, b.outlier_idx), ctx
+        assert np.array_equal(a.outlier_delta, b.outlier_delta), ctx
+        la, lb = a.codebook_lengths, b.codebook_lengths
+        assert (la is None) == (lb is None), ctx
+        if la is not None:
+            assert np.array_equal(la, lb), ctx
+    assert np.array_equal(cs.literal_idx, cf.literal_idx)
+    assert np.array_equal(cs.literal_val, cf.literal_val)
+
+
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
     """Run a python snippet in a subprocess with N host platform devices."""
     env = dict(os.environ)

@@ -1,0 +1,173 @@
+"""Edge-case pass over the fused pipeline: empty arrays, size-1 chunks,
+non-finite inputs, ragged tails, and an adversarial speculation workload
+— every case asserting the fused/speculative paths stay bit-identical
+to their oracles (staged reference, speculation='off')."""
+import numpy as np
+import pytest
+
+from conftest import assert_streams_bit_identical
+from repro.core import CEAZ, CEAZConfig, default_offline_codebook
+
+OFFLINE = default_offline_codebook()
+
+
+def _pair(**kw):
+    mk = lambda uf: CEAZ(CEAZConfig(backend="jax", use_fused=uf, **kw),
+                         offline_codebook=OFFLINE)
+    return mk(False), mk(True)
+
+
+def _check_pair(x, **kw):
+    staged, fused = _pair(**kw)
+    cs, cf = staged.compress(x), fused.compress(x)
+    assert_streams_bit_identical(cs, cf)
+    rs = staged._decompress_staged(cs)
+    rf = fused.decompress(cf)
+    assert rs.dtype == rf.dtype == x.dtype and rs.shape == x.shape
+    assert np.array_equal(rs, rf, equal_nan=True)
+    return cs, rs
+
+
+# -- empty arrays ------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,kw", [("rel", dict(eb=1e-4)),
+                                     ("fixed_ratio",
+                                      dict(target_ratio=8.0))])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+@pytest.mark.parametrize("shape", [(0,), (0, 7)])
+def test_empty_arrays(mode, kw, dtype, shape):
+    x = np.zeros(shape, dtype)
+    cs, rec = _check_pair(x, mode=mode, **kw)
+    assert cs.chunks == [] and cs.nbytes() == 0
+    assert rec.shape == shape
+
+
+def test_empty_member_in_batch():
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True),
+                offline_codebook=OFFLINE)
+    rng = np.random.default_rng(0)
+    shards = [rng.standard_normal(5000).astype(np.float32),
+              np.zeros(0, np.float32),
+              rng.standard_normal(5000).astype(np.float32)]
+    outs = comp.compress_batch(shards)
+    recs = comp.decompress_batch(outs)
+    for r, s in zip(recs, shards):
+        assert r.shape == s.shape and r.dtype == s.dtype
+
+
+# -- size-1 chunks -----------------------------------------------------------
+
+@pytest.mark.parametrize("mode,kw", [("abs", dict(eb=1e-3)),
+                                     ("fixed_ratio",
+                                      dict(target_ratio=8.0))])
+def test_size_one_chunks(mode, kw):
+    """chunk_bytes=4, block_size=1 => every chunk holds ONE value; the
+    whole policy/feedback machinery runs per value."""
+    rng = np.random.default_rng(3)
+    x = np.cumsum(rng.standard_normal(17)).astype(np.float32)
+    cs, rec = _check_pair(x, mode=mode, chunk_bytes=4, block_size=1, **kw)
+    assert len(cs.chunks) == 17
+    assert all(ch.n_values == 1 for ch in cs.chunks)
+
+
+def test_single_value_stream():
+    x = np.asarray([1.25], np.float32)
+    cs, rec = _check_pair(x, mode="rel", eb=1e-4)
+    assert len(cs.chunks) == 1 and cs.chunks[0].n_values == 1
+
+
+# -- non-finite inputs -------------------------------------------------------
+
+@pytest.mark.parametrize("fill", [np.nan, np.inf, -np.inf],
+                         ids=["nan", "inf", "-inf"])
+@pytest.mark.parametrize("mode,kw", [("abs", dict(eb=1e-3)),
+                                     ("fixed_ratio",
+                                      dict(target_ratio=8.0))])
+def test_all_nonfinite_inputs(fill, mode, kw):
+    """All-NaN / all-Inf arrays must compress deterministically and
+    bit-identically on both paths (NaN disables the bound — comparisons
+    against NaN are false — while +-Inf round-trips exactly through the
+    literal channel)."""
+    x = np.full(5000, fill, np.float32)
+    cs, rec = _check_pair(x, mode=mode, chunk_bytes=1 << 12,
+                          block_size=512, **kw)
+    if np.isinf(fill):
+        assert np.array_equal(rec, x)     # literals restore the infs
+
+
+def test_speculation_off_identity_on_nonfinite_mix():
+    rng = np.random.default_rng(9)
+    x = np.cumsum(rng.standard_normal(6 * 1024)).astype(np.float32)
+    x[::97] = np.inf
+    x[5::131] = np.nan
+    mk = lambda spec: CEAZ(
+        CEAZConfig(mode="fixed_ratio", target_ratio=8.0, use_fused=True,
+                   chunk_bytes=1 << 12, speculation=spec),
+        offline_codebook=OFFLINE)
+    assert_streams_bit_identical(mk("off").compress(x),
+                                 mk(4).compress(x))
+
+
+# -- ragged tails ------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,kw", [("rel", dict(eb=1e-4)),
+                                     ("fixed_ratio",
+                                      dict(target_ratio=8.0))])
+@pytest.mark.parametrize("tail", [1, 300, 511])
+def test_last_chunk_shorter_than_block(mode, kw, tail):
+    """A stream whose last chunk is SHORTER than the block grain: the
+    tail chunk's only block is partial, exercising the hufdec
+    early-exit bound end-to-end on both decode paths."""
+    rng = np.random.default_rng(5)
+    n = 2 * 4096 + tail                  # cv=4096, block=512, tail<block
+    x = np.cumsum(rng.standard_normal(n)).astype(np.float32)
+    cs, rec = _check_pair(x, mode=mode, chunk_bytes=1 << 14,
+                          block_size=512, **kw)
+    assert cs.chunks[-1].n_values == tail
+    assert len(cs.chunks[-1].block_nbits) == 1
+
+
+# -- adversarial speculation workload ---------------------------------------
+
+def test_speculation_miss_every_chunk_monotone_ramp():
+    """A monotone per-chunk rate ramp (noise sigma doubling every
+    chunk) defeats the rate-law forecast on EVERY chunk: the bound
+    moves each feedback step by more than the prediction can see. The
+    speculative pipeline must repair every miss and still emit the
+    sequential loop's exact bytes."""
+    from repro.runtime import fused as F
+    rng = np.random.default_rng(13)
+    cv = 2048
+    n_chunks = 12
+    # sigma x4 per chunk = +2 bits/chunk, scaled so eb never saturates
+    # at the controller clamps (a clamped bound predicts trivially)
+    parts = [rng.standard_normal(cv) * (1e-3 * 4.0 ** j)
+             for j in range(n_chunks)]
+    x = np.concatenate(parts).astype(np.float32)
+    mk = lambda spec: CEAZ(
+        CEAZConfig(mode="fixed_ratio", target_ratio=8.0, use_fused=True,
+                   chunk_bytes=cv * 4, block_size=512, speculation=spec),
+        offline_codebook=OFFLINE)
+    c_off = mk("off").compress(x)
+    repairs = []
+    orig = F._run_pass1
+    F._run_pass1 = lambda *a, **k: repairs.append(1) or orig(*a, **k)
+    try:
+        c_spec = mk(6).compress(x)
+    finally:
+        F._run_pass1 = orig
+    assert_streams_bit_identical(c_off, c_spec)
+    # the ramp must actually defeat the forecast: every speculated
+    # chunk except each window's (always-exact) head needed a repair
+    windows = -(-n_chunks // 6)
+    assert len(repairs) >= n_chunks - windows
+
+
+def test_speculation_window_one_equals_off():
+    rng = np.random.default_rng(21)
+    x = np.cumsum(rng.standard_normal(8 * 1024)).astype(np.float32)
+    mk = lambda spec: CEAZ(
+        CEAZConfig(mode="fixed_ratio", target_ratio=8.0, use_fused=True,
+                   chunk_bytes=1 << 12, speculation=spec),
+        offline_codebook=OFFLINE)
+    assert_streams_bit_identical(mk("off").compress(x), mk(1).compress(x))

@@ -387,14 +387,15 @@ def test_grad_snapshot_stream_round_trip(tmp_path):
     assert back["step"] == 7
 
 
-def test_compress_batch_staged_fallback_float64(tmp_path):
-    """Satellite regression: float64 / predictor='none' inputs route
-    through the facade's one-line staged fallback — no caller split."""
+def test_compress_batch_fused_float64_and_value_direct(tmp_path):
+    """Satellite regression: float64 / predictor='none' inputs flow
+    through the facade's fused grouping — no caller split, and since
+    PR 5 no staged fallback either (they decode fused too)."""
     rng = np.random.default_rng(3)
     x64 = np.cumsum(rng.standard_normal((64, 256))).reshape(64, 256)
     comp = CEAZ(CEAZConfig(mode="rel", eb=1e-5, use_fused=True))
     outs = comp.compress_batch([x64, x64 * 2.0])
-    assert all(c.word_bits == 64 for c in outs)         # staged float64
+    assert all(c.word_bits == 64 for c in outs)         # float64 streams
     for c, x in zip(outs, [x64, x64 * 2.0]):
         rec = comp.decompress(c)
         assert np.abs(rec - x).max() <= 1e-5 * (x.max() - x.min())
@@ -406,3 +407,89 @@ def test_compress_batch_staged_fallback_float64(tmp_path):
     assert c.predictor == "none"                        # value-direct path
     rec = direct.decompress(c)
     assert np.abs(rec - noise).max() <= 1e-4 * (noise.max() - noise.min())
+
+
+# -- stream fuzzing: corruption sweep over the STREAM_FORMAT.md layout -------
+
+def _ceaz_stream(tmp_path):
+    """A real .ceazs stream whose payloads are pickled CEAZCompressed
+    records with SHIPPED CODEBOOKS (adaptive=False rebuilds per chunk,
+    so every chunk carries its lengths array — the fuzz target)."""
+    path = str(tmp_path / "fuzz.ceazs")
+    rng = np.random.default_rng(4)
+    shards = [np.cumsum(rng.standard_normal(6000)).astype(np.float32)
+              for _ in range(3)]
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           adaptive=False, chunk_bytes=1 << 13))
+    E.write_stream(path, shards, comp, fsync=False)
+    return path, shards, comp
+
+
+def test_fuzz_bit_flip_in_codebook_bytes(tmp_path):
+    """Flip bits INSIDE a record's serialized codebook lengths: the
+    payload CRC must catch it — never a silently wrong codebook."""
+    path, shards, comp = _ceaz_stream(tmp_path)
+    r = E.StreamReader(path)
+    rec = r.records[1]
+    payload = r.payload(1)
+    c = E.deserialize_payload(payload, rec)
+    lengths = c.chunks[0].codebook_lengths
+    assert lengths is not None
+    needle = lengths.tobytes()
+    pos = payload.find(needle)
+    assert pos > 0                       # the codebook bytes are locatable
+    base = rec["offset"] + E.RECORD_HEADER.size
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    for bit in (0, 3, 7):                # sweep bits across the lengths area
+        fuzzed = bytearray(data)
+        fuzzed[base + pos + bit * 11] ^= 1 << bit
+        open(path, "wb").write(bytes(fuzzed))
+        rr = E.StreamReader(path)        # index itself is intact
+        with pytest.raises(E.StreamCorruptionError, match="checksum"):
+            rr.payload(1)
+        rr.close()
+    open(path, "wb").write(bytes(data))  # restore: stream reads clean again
+    assert len(E.read_stream_arrays(path)) == len(shards)
+
+
+def _section_boundaries(path):
+    """Every section boundary of the v1 layout (STREAM_FORMAT.md): after
+    the stream magic, after each record header, after each payload,
+    footer start/middle, trailer start, before the end magic."""
+    r = E.StreamReader(path)
+    records = list(r.records)
+    r.close()
+    data = open(path, "rb").read()
+    foot_off, foot_len, _, _ = E.TRAILER.unpack(data[-E.TRAILER.size:])
+    cuts = {len(E.STREAM_MAGIC)}
+    for rec in records:
+        cuts.add(rec["offset"] + E.RECORD_HEADER.size)          # after header
+        cuts.add(rec["offset"] + E.RECORD_HEADER.size + rec["nbytes"])
+    cuts.add(foot_off)                                          # footer start
+    cuts.add(foot_off + foot_len // 2)                          # mid-footer
+    cuts.add(foot_off + foot_len)                               # trailer start
+    cuts.add(len(data) - len(E.END_MAGIC))                      # pre end-magic
+    return sorted(c for c in cuts if c < len(data)), data
+
+
+def test_fuzz_truncation_at_every_section_boundary(tmp_path):
+    """Truncating the stream at ANY section boundary must raise
+    StreamCorruptionError at open or payload access — never return
+    garbage arrays."""
+    path, shards, comp = _ceaz_stream(tmp_path)
+    cuts, data = _section_boundaries(path)
+    assert len(cuts) >= 10               # all sections of the 3-record file
+    for cut in cuts:
+        open(path, "wb").write(data[:cut])
+        with pytest.raises(E.StreamCorruptionError):
+            r = E.StreamReader(path)
+            try:
+                for i in range(len(r.records)):
+                    E.deserialize_payload(r.payload(i), r.records[i])
+            finally:
+                r.close()
+    open(path, "wb").write(data)
+    back = E.read_stream_arrays(path)
+    for a, b in zip(back, shards):
+        assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())

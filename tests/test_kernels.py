@@ -117,6 +117,49 @@ def test_hufdec_kernel_vs_ref_roundtrip(rng):
                                   syms.astype(np.uint16))
 
 
+@pytest.mark.parametrize("counts", [
+    [3], [1], [511],                      # single chunk shorter than a block
+    [512, 100], [700, 5], [37, 1, 512],   # mixed full/ragged tail blocks
+])
+def test_hufdec_tail_block_early_exit_bit_identity(counts, rng):
+    """Regression for the counts-aware fori upper bound: chunks whose
+    blocks are ALL shorter than the block grain (the early-exit case)
+    must decode bit-identically to the staged decoder in both impls,
+    including the zero padding beyond each chunk's count."""
+    bs = 512
+    rows_w, rows_nb, books, all_syms = [], [], [], []
+    for k, n in enumerate(counts):
+        syms = np.clip(rng.normal(512, 10 + 40 * k, n), 0,
+                       1023).astype(np.int64)
+        cb = H.Codebook.from_freqs(np.bincount(syms, minlength=1024))
+        w64, bnb, _ = H.encode(syms, cb, bs)
+        from repro.runtime.fused_decode import _u64_to_u32
+        rows_w.append(_u64_to_u32(w64))
+        rows_nb.append(bnb)
+        books.append(cb)
+        all_syms.append(syms)
+    C = len(counts)
+    W = max(len(w) for w in rows_w) + 2
+    NB = max(len(nb) for nb in rows_nb)
+    words2 = np.zeros((C, W), np.uint32)
+    nbits2 = np.zeros((C, NB), np.int32)
+    for i in range(C):
+        words2[i, :len(rows_w[i])] = rows_w[i]
+        nbits2[i, :len(rows_nb[i])] = rows_nb[i]
+    sym_flat = np.concatenate([b.tables()[0] for b in books])
+    len_flat = np.concatenate([b.tables()[1] for b in books])
+    args = (jnp.asarray(words2), jnp.asarray(nbits2),
+            jnp.asarray(np.asarray(counts, np.int32)),
+            jnp.asarray(sym_flat), jnp.asarray(len_flat),
+            jnp.asarray(np.arange(C, dtype=np.int32)), bs)
+    out_r = np.asarray(HDR.decode_blocks(*args))
+    out_k = np.asarray(HDO.decode_blocks(*args, interpret=True))
+    np.testing.assert_array_equal(out_r, out_k)
+    for i, (n, syms) in enumerate(zip(counts, all_syms)):
+        np.testing.assert_array_equal(out_r[i][:n], syms.astype(np.uint16))
+        assert not out_r[i][n:].any()     # padding stays zero past count
+
+
 @pytest.mark.parametrize("bits", [2, 4, 8, 16])
 @pytest.mark.parametrize("n", [7, 4096, 50000])
 def test_bitpack_roundtrip_and_ref(bits, n, rng):
