@@ -14,7 +14,8 @@ def main() -> None:
     from . import (chi_thresholds, fixed_ratio, fused_decode,
                    fused_pipeline, kernel_microbench, offline_codewords,
                    parallel_io, ratio_distortion, roofline_report,
-                   sort_latency, symbol_hist, throughput, update_size)
+                   single_pass, sort_latency, symbol_hist, throughput,
+                   update_size)
     suites = [
         ("sort_latency(Fig6/Alg1)", sort_latency.run),
         ("symbol_hist(Fig7)", symbol_hist.run),
@@ -23,6 +24,7 @@ def main() -> None:
         ("chi_thresholds(Fig12)", chi_thresholds.run),
         ("fixed_ratio(Fig13)", fixed_ratio.run),
         ("fixed_ratio_speculation(gate)", fixed_ratio.run_speculation),
+        ("single_pass(gate)", single_pass.run),
         ("ratio_distortion(Fig14/T4/T5)", ratio_distortion.run),
         ("throughput(Fig15/16,T6/T7)", throughput.run),
         ("fused_pipeline(Fig4)", fused_pipeline.run),

@@ -65,6 +65,49 @@ Traceback (most recent call last):
     ...
 ValueError: decode block_size=4096 inconsistent with stream: ...
 
+Single-pass encode with a codebook bank
+---------------------------------------
+
+``codebook='bank'`` replaces the per-chunk Huffman build with
+selection from an offline-trained bank, so the fused encoder runs
+quantize -> select -> encode -> pack as ONE traced pass
+(docs/CODEBOOK_BANK.md is the normative spec). Train a toy bank from
+two representative fields, then compress in-envelope data — every
+chunk selects a book (``action == 'bank'``):
+
+>>> from repro.core import train_codebook_bank
+>>> rng = np.random.default_rng(7)
+>>> fields = [np.cumsum(rng.standard_normal(20000)).astype(np.float32) / 10,
+...           np.cumsum(rng.standard_normal(20000)).astype(np.float32) / 50]
+>>> bank = train_codebook_bank(fields, n_books=2)
+>>> bank.n_books, len(bank.id)
+(2, 12)
+>>> banked = CEAZ(CEAZConfig(mode="abs", eb=1e-3, use_fused=True,
+...                          chunk_bytes=1 << 16, block_size=1024,
+...                          codebook="bank"), bank=bank)
+>>> walk = np.cumsum(rng.standard_normal(30000)).astype(np.float32) / 10
+>>> cb = banked.compress(walk)
+>>> {ch.action for ch in cb.chunks}
+{'bank'}
+>>> bool(np.abs(banked.decompress(cb) - walk).max() <= 1e-3)
+True
+
+Adversarial input — i.i.d. noise a smooth-walk bank never trained on —
+trips the drift guard: the facade discards the bank encode and
+re-encodes with the exact two-pass path, byte-identical to
+``codebook='exact'``, so no chunk reports ``'bank'``:
+
+>>> noise = rng.standard_normal(30000).astype(np.float32)
+>>> cn = banked.compress(noise)
+>>> 'bank' in {ch.action for ch in cn.chunks}
+False
+>>> exact = CEAZ(CEAZConfig(mode="abs", eb=1e-3, use_fused=True,
+...                         chunk_bytes=1 << 16, block_size=1024,
+...                         codebook="exact"))
+>>> all(np.array_equal(a.words, b.words)
+...     for a, b in zip(cn.chunks, exact.compress(noise).chunks))
+True
+
 Streams
 -------
 

@@ -1,7 +1,10 @@
 """CEAZ core: the paper's contribution as a composable JAX/host library."""
 from .ceaz import CEAZ, CEAZCompressed, CEAZConfig, compress, decompress
-from .codebook import (AdaptiveCoder, build_offline_codebook,
-                       default_offline_codebook, min_update_bytes, sigma_of)
+from .codebook import (AdaptiveCoder, BankCoder, CodebookBank,
+                       build_offline_codebook, default_codebook_bank,
+                       default_offline_codebook, lookup_bank,
+                       min_update_bytes, register_bank, sigma_of,
+                       train_codebook_bank)
 from .dualquant import (NUM_SYMBOLS, OUTLIER_CODE, RADIUS, dequantize,
                         dual_quantize, inverse_lorenzo, lorenzo_predict,
                         np_dequantize, np_dual_quantize)
@@ -13,8 +16,10 @@ from .ratecontrol import (FixedRatioController, bitrate_from_ratio,
 
 __all__ = [
     "CEAZ", "CEAZCompressed", "CEAZConfig", "compress", "decompress",
-    "AdaptiveCoder", "build_offline_codebook", "default_offline_codebook",
-    "min_update_bytes", "sigma_of", "NUM_SYMBOLS", "OUTLIER_CODE", "RADIUS",
+    "AdaptiveCoder", "BankCoder", "CodebookBank", "build_offline_codebook",
+    "default_codebook_bank", "default_offline_codebook", "lookup_bank",
+    "min_update_bytes", "register_bank", "train_codebook_bank",
+    "sigma_of", "NUM_SYMBOLS", "OUTLIER_CODE", "RADIUS",
     "dequantize", "dual_quantize", "inverse_lorenzo", "lorenzo_predict",
     "np_dequantize", "np_dual_quantize", "Codebook", "decode", "encode",
     "entropy_bits", "compression_ratio", "max_abs_err", "psnr", "rmse",

@@ -25,7 +25,8 @@ from typing import List, Optional
 import numpy as np
 
 from . import dualquant as dq
-from .codebook import (DEFAULT_TAU0, DEFAULT_TAU1, AdaptiveCoder,
+from .codebook import (DEFAULT_BANK_DRIFT_TOL, DEFAULT_TAU0, DEFAULT_TAU1,
+                       AdaptiveCoder, BankCoder, CodebookBank,
                        min_update_bytes, sigma_of)
 from .huffman import NUM_SYMBOLS, Codebook, encode, decode, entropy_bits
 from .metrics import compression_ratio
@@ -51,6 +52,12 @@ class CompressedChunk:
     outlier_idx: np.ndarray      # chunk-local positions (int64)
     outlier_delta: np.ndarray    # int32 deltas
     center: int = 0              # value-direct mode: per-chunk centre code
+    # bank mode (action == 'bank'): which book of which codebook bank
+    # encoded this chunk; decode resolves the book from the bank instead
+    # of shipped lengths. Defaults keep pre-bank pickles deserializing
+    # (decoders read these through getattr).
+    bank_ref: str = ""
+    bank_index: int = -1
 
     def payload_bits(self) -> int:
         return int(self.block_nbits.sum())
@@ -155,6 +162,20 @@ class CEAZConfig:
     # 'auto' (per-backend table: jnp on cpu/gpu, pallas on tpu). An
     # unknown name raises ValueError at first compress/decompress.
     kernel_impl: str = "auto"
+    # Codebook policy (docs/CODEBOOK_BANK.md): 'exact' keeps the
+    # chi-driven adaptive coder (host tree builds between the fused
+    # passes); 'bank' selects per chunk from an offline CodebookBank —
+    # on the fused abs/rel path quantize -> select -> encode -> pack run
+    # as ONE traced pass with no host work between quantize and pack.
+    # 'auto' means 'bank' iff a bank was passed to the facade. An
+    # unknown name raises ValueError at first compress.
+    codebook: str = "exact"
+    # Bank mode's safety valve: after a bank compress, if the aggregate
+    # achieved/ideal bits drifted past this bound the whole array is
+    # recompressed on the exact path (byte-identical to
+    # codebook='exact'). The check replays from histogram summaries —
+    # no second quantization unless it actually trips.
+    bank_drift_tol: float = DEFAULT_BANK_DRIFT_TOL
 
 
 class CEAZ:
@@ -175,7 +196,8 @@ class CEAZ:
     """
 
     def __init__(self, config: CEAZConfig | None = None,
-                 offline_codebook: Codebook | None = None, **kw):
+                 offline_codebook: Codebook | None = None,
+                 bank: CodebookBank | None = None, **kw):
         if config is None:
             config = CEAZConfig(**kw)
         elif kw:
@@ -185,6 +207,13 @@ class CEAZ:
             from .codebook import default_offline_codebook
             offline_codebook = default_offline_codebook()
         self.offline = offline_codebook
+        if bank is None and config.codebook == "bank":
+            from .codebook import default_codebook_bank
+            bank = default_codebook_bank()
+        self.bank = bank
+        if self.bank is not None:
+            from .codebook import register_bank
+            register_bank(self.bank)   # decode-side bank_ref resolution
 
     # -- helpers -------------------------------------------------------------
     def _abs_eb(self, x: np.ndarray) -> float:
@@ -210,7 +239,7 @@ class CEAZ:
                       outlier_flat: np.ndarray, eb: float,
                       coder: AdaptiveCoder) -> CompressedChunk:
         freqs = np.bincount(codes_flat, minlength=NUM_SYMBOLS)
-        if self.cfg.adaptive:
+        if isinstance(coder, BankCoder) or self.cfg.adaptive:
             decision = coder.step(freqs)
         else:
             cb = Codebook.from_freqs(freqs, exact=self.cfg.exact_build)
@@ -226,7 +255,8 @@ class CEAZ:
                               if decision.stored_codebook else None),
             codebook_id=decision.codebook.id,
             outlier_idx=oidx.astype(np.int64),
-            outlier_delta=delta_flat[oidx].astype(np.int32))
+            outlier_delta=delta_flat[oidx].astype(np.int32),
+            bank_ref=decision.bank_ref, bank_index=decision.bank_index)
 
     # -- public API ------------------------------------------------------------
     def _pick_predictor(self, x: np.ndarray, eb: float) -> str:
@@ -257,11 +287,16 @@ class CEAZ:
         combination runs the fused device pipeline (float64 and
         value-direct included); ``use_fused=False`` keeps the
         host-staged reference. Output bits do not depend on the path
-        taken.
+        taken. ``cfg.codebook='bank'`` swaps the chi policy for
+        per-chunk bank selection (single-pass on the fused abs/rel
+        path); when the achieved/ideal drift exceeds
+        ``cfg.bank_drift_tol`` the array transparently recompresses on
+        the exact path — byte-identical to ``codebook='exact'``.
 
         Raises:
           TypeError: non-float dtype.
-          ValueError: unknown ``cfg.mode`` or ``cfg.kernel_impl``.
+          ValueError: unknown ``cfg.mode``, ``cfg.codebook`` or
+            ``cfg.kernel_impl``.
         """
         x = np.asarray(x)
         if x.dtype not in (np.float32, np.float64):
@@ -276,14 +311,31 @@ class CEAZ:
                 predictor="none" if self.cfg.predictor == "none"
                 else "lorenzo")
         fused_ok = self.cfg.use_fused
+        if not self._bank_mode():
+            return self._compress_routed(x, word_bits, fused_ok,
+                                         self._coder())
+        coder = BankCoder(self.bank)
+        c = self._compress_routed(x, word_bits, fused_ok, coder)
+        if coder.drift() > self.cfg.bank_drift_tol:
+            # out-of-distribution input: fall back to the exact two-pass
+            # path for the whole array (drift is replayed on host from
+            # the histogram summaries the bank pass already produced)
+            return self._compress_routed(x, word_bits, fused_ok,
+                                         self._coder())
+        return c
+
+    def _compress_routed(self, x: np.ndarray, word_bits: int,
+                         use_fused: bool, coder) -> CEAZCompressed:
+        """mode/predictor routing for one array, under a given coder."""
         if self.cfg.mode in ("abs", "rel"):
             pred = self._pick_predictor(x, self._abs_eb(x))
-            if fused_ok:
-                return self._compress_eb_fused(x, pred)
+            if use_fused:
+                return self._compress_eb_fused(x, pred, coder=coder)
             if pred == "none":
-                return self._compress_eb_direct(x, word_bits)
-            return self._compress_eb(x, word_bits)
-        return self._compress_fixed_ratio(x, word_bits, use_fused=fused_ok)
+                return self._compress_eb_direct(x, word_bits, coder=coder)
+            return self._compress_eb(x, word_bits, coder=coder)
+        return self._compress_fixed_ratio(x, word_bits, use_fused=use_fused,
+                                          coder=coder)
 
     def compress_batch(self, shards, plan=None) -> List[CEAZCompressed]:
         """Compress a sequence of shards under this facade's policy.
@@ -308,7 +360,11 @@ class CEAZ:
         shards = [np.asarray(s) for s in shards]
         out: List[Optional[CEAZCompressed]] = [None] * len(shards)
         preds: dict = {}               # probe once; leftovers reuse it
-        if self.cfg.use_fused and self.cfg.mode in ("abs", "rel"):
+        if self.cfg.use_fused and self.cfg.mode in ("abs", "rel") \
+                and not self._bank_mode():
+            # bank mode routes per shard through compress() below: the
+            # drift-fallback decision is per array, so the grouped pass
+            # (shared trace, per-shard coders) does not apply
             groups: dict = {}
             for i, s in enumerate(shards):
                 if s.dtype not in (np.float32, np.float64) or s.size == 0:
@@ -339,16 +395,39 @@ class CEAZ:
         return AdaptiveCoder(self.offline, self.cfg.tau0, self.cfg.tau1,
                              self.cfg.exact_build)
 
+    def _bank_mode(self) -> bool:
+        """Resolve cfg.codebook: 'bank' always, 'auto' iff a bank was
+        handed to the facade, 'exact' never."""
+        cb = self.cfg.codebook
+        if cb == "bank":
+            return True
+        if cb == "auto":
+            return self.bank is not None
+        if cb == "exact":
+            return False
+        raise ValueError(
+            f"codebook must be 'exact', 'bank' or 'auto', got {cb!r}")
+
     def _chunk_values(self, word_bits: int) -> int:
         return max(self.cfg.chunk_bytes // (word_bits // 8),
                    self.cfg.block_size)
 
     def _compress_eb_fused(self, x: np.ndarray,
-                           predictor: str = "lorenzo") -> CEAZCompressed:
-        """Policy stays here; all per-value work runs device-resident."""
+                           predictor: str = "lorenzo",
+                           coder=None) -> CEAZCompressed:
+        """Policy stays here; all per-value work runs device-resident.
+        With a BankCoder the whole encode runs as ONE traced pass
+        (quantize -> select -> encode -> pack, no host tree build)."""
         from ..runtime import fused
+        coder = coder if coder is not None else self._coder()
+        if isinstance(coder, BankCoder):
+            return fused.compress_error_bounded_bank(
+                x, self._abs_eb(x), self.cfg.mode, coder,
+                self._chunk_values(x.dtype.itemsize * 8),
+                self.cfg.block_size, kernel_impl=self.cfg.kernel_impl,
+                predictor=predictor)
         return fused.compress_error_bounded(
-            x, self._abs_eb(x), self.cfg.mode, self._coder(),
+            x, self._abs_eb(x), self.cfg.mode, coder,
             self._chunk_values(x.dtype.itemsize * 8), self.cfg.block_size,
             adaptive=self.cfg.adaptive, exact_build=self.cfg.exact_build,
             kernel_impl=self.cfg.kernel_impl, predictor=predictor)
@@ -364,12 +443,12 @@ class CEAZ:
         return dq.value_quantize(chunk, eb,
                                  kernel_impl=self.cfg.kernel_impl)
 
-    def _compress_eb_direct(self, x: np.ndarray,
-                            word_bits: int) -> CEAZCompressed:
+    def _compress_eb_direct(self, x: np.ndarray, word_bits: int,
+                            coder=None) -> CEAZCompressed:
         """predictor='none': per-chunk value-direct quantization."""
         flat = x.reshape(-1)
         eb = self._abs_eb(x)
-        coder = self._coder()
+        coder = coder if coder is not None else self._coder()
         cv = max(self.cfg.chunk_bytes // (word_bits // 8),
                  self.cfg.block_size)
         chunks, lit_idx, lit_val = [], [], []
@@ -393,7 +472,8 @@ class CEAZ:
             literal_idx=np.concatenate(lit_idx).astype(np.int64),
             literal_val=np.concatenate(lit_val))
 
-    def _compress_eb(self, x: np.ndarray, word_bits: int) -> CEAZCompressed:
+    def _compress_eb(self, x: np.ndarray, word_bits: int,
+                     coder=None) -> CEAZCompressed:
         ndim = min(x.ndim, 3)
         work = x if x.ndim <= 3 else x.reshape((-1,) + x.shape[-2:])
         eb = self._abs_eb(x)
@@ -401,7 +481,7 @@ class CEAZ:
         codes_f = codes.reshape(-1)
         delta_f = delta.reshape(-1)
         outl_f = outlier.reshape(-1)
-        coder = self._coder()
+        coder = coder if coder is not None else self._coder()
         cv = max(self.cfg.chunk_bytes // (word_bits // 8), self.cfg.block_size)
         chunks = []
         for s in range(0, len(codes_f), cv):
@@ -418,7 +498,8 @@ class CEAZ:
                               literal_val=x.reshape(-1)[viol].copy())
 
     def _compress_fixed_ratio(self, x: np.ndarray, word_bits: int,
-                              use_fused: bool = False) -> CEAZCompressed:
+                              use_fused: bool = False,
+                              coder=None) -> CEAZCompressed:
         flat = x.reshape(-1)
         target_b = bitrate_from_ratio(self.cfg.target_ratio, word_bits)
         # seed eb via one-shot rate law on the first chunk sample
@@ -427,7 +508,7 @@ class CEAZ:
         sample = flat[:min(len(flat), cv)]
         eb = calibrate_eb_for_bitrate(sample, target_b, 1)
         ctrl = FixedRatioController(target_bitrate=target_b, eb=eb)
-        coder = self._coder()
+        coder = coder if coder is not None else self._coder()
         if use_fused:
             from ..runtime import fused
             return fused.compress_fixed_ratio(
@@ -497,7 +578,8 @@ class CEAZ:
                     self._check_block_size(comps[i])
                 dec = FD.decompress_batch([comps[i] for i in fused_idx],
                                           self.cfg.block_size, self.offline,
-                                          kernel_impl=self.cfg.kernel_impl)
+                                          kernel_impl=self.cfg.kernel_impl,
+                                          bank=self.bank)
                 for i, a in zip(fused_idx, dec):
                     out[i] = a
         return [a if a is not None else self._decompress_staged(c)
@@ -527,7 +609,8 @@ class CEAZ:
         if not c.chunks:                     # empty stream: zero values
             return np.zeros(c.shape, dtype=out_dtype)
         # decode tables are memoized per distinct codebook, not per chunk
-        books: List[Codebook] = replay_codebooks(c.chunks, self.offline)
+        books: List[Codebook] = replay_codebooks(c.chunks, self.offline,
+                                                 bank=self.bank)
 
         if c.predictor == "none":
             parts = []

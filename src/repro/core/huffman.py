@@ -249,14 +249,26 @@ def codebook_from_lengths(lengths: np.ndarray) -> Codebook:
     return _codebook_from_lengths_cached(l8.tobytes())
 
 
-def replay_codebooks(chunks, offline: Codebook) -> list:
+def replay_codebooks(chunks, offline: Codebook, bank=None) -> list:
     """The decoder-side codebook sequence, exactly as the encoder chose
-    it: shipped lengths rebuild (memoized), 'offline' resets, everything
-    else carries the previous book forward. Shared by the staged and
-    fused decoders — the single source of the replay state machine."""
+    it: bank chunks resolve their book from the referenced
+    :class:`~repro.core.codebook.CodebookBank` (the `bank` argument
+    when its id matches, the process registry otherwise — stream
+    readers register banks from footer meta), shipped lengths rebuild
+    (memoized), 'offline' resets, everything else carries the previous
+    book forward. Shared by the staged and fused decoders — the single
+    source of the replay state machine."""
     books, current = [], offline
     for ch in chunks:
-        if ch.codebook_lengths is not None:
+        bank_index = getattr(ch, "bank_index", -1)
+        if bank_index >= 0:
+            ref = getattr(ch, "bank_ref", "")
+            b = bank
+            if b is None or (ref and b.id != ref):
+                from .codebook import lookup_bank   # lazy: no import cycle
+                b = lookup_bank(ref)
+            current = b.codebook(int(bank_index))
+        elif ch.codebook_lengths is not None:
             current = codebook_from_lengths(ch.codebook_lengths)
         elif ch.action == "offline":
             current = offline

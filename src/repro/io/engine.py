@@ -88,7 +88,18 @@ def serialize_payload(obj) -> tuple:
     """
     from ..core.ceaz import CEAZCompressed
     if isinstance(obj, CEAZCompressed):
-        return pickle.dumps(obj, protocol=4), {"codec": "ceaz"}
+        meta: Dict = {"codec": "ceaz"}
+        # bank-mode records are self-describing: the index row carries
+        # the bank id plus the per-chunk adaptation delta (selected bank
+        # rows), so decoders resolve codebooks without re-deriving them
+        # (docs/CODEBOOK_BANK.md, docs/STREAM_FORMAT.md)
+        delta = [int(getattr(ch, "bank_index", -1)) for ch in obj.chunks]
+        if any(d >= 0 for d in delta):
+            meta["bank_id"] = next(
+                (getattr(ch, "bank_ref", "") for ch in obj.chunks
+                 if getattr(ch, "bank_ref", "")), "")
+            meta["bank_delta"] = delta
+        return pickle.dumps(obj, protocol=4), meta
     if isinstance(obj, np.ndarray):
         if obj.dtype.name not in np.sctypeDict:   # ml_dtypes (bf16, fp8)
             return obj.tobytes(), {"codec": "bytes",
@@ -458,7 +469,21 @@ class AsyncDecodeReadEngine:
     def __init__(self, path: str, comp=None, *, group: int = 8,
                  max_inflight: int = 2, sync: bool = False):
         from ..core import CEAZ, CEAZConfig
+        from ..core.codebook import CodebookBank, register_bank
         self._reader = StreamReader(path)   # validates trailer/footer/index
+        # bank-mode streams carry the bank artifact in the footer meta;
+        # reconstruct + register it so decode resolves bank-coded chunks
+        # without the trained artifact on disk (docs/CODEBOOK_BANK.md)
+        self._bank = None
+        bank_meta = self._reader.meta.get("codebook_bank")
+        if bank_meta is not None:
+            try:
+                self._bank = register_bank(CodebookBank.from_meta(bank_meta))
+            except (ValueError, KeyError, TypeError) as e:
+                self._reader.close()
+                raise StreamCorruptionError(
+                    f"{path}: footer meta carries an invalid "
+                    f"'codebook_bank' artifact: {e}") from e
         if comp is None:
             # decode needs the encoder's block grain; self-describing
             # streams record it in the footer meta. Streams from writers
@@ -475,7 +500,8 @@ class AsyncDecodeReadEngine:
                     "`comp` if the stream was compressed with another "
                     "grain.", stacklevel=2)
             comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
-                                   block_size=int(bs)))
+                                   block_size=int(bs), codebook="auto"),
+                        bank=self._bank)
         self._comp = comp
         self._group = max(1, group)
         self._sync = sync
@@ -529,10 +555,40 @@ class AsyncDecodeReadEngine:
         except BaseException as e:              # surfaced on the consumer
             self._put(("__error__", e))
 
+    def _check_bank_record(self, rec: Dict, obj) -> None:
+        """Cross-check a record's bank-id/delta index fields against the
+        payload before decode touches a codebook (tamper/corruption on
+        the cheap index metadata must not decode garbage silently)."""
+        from ..core.codebook import lookup_bank
+        bank_id = rec.get("bank_id")
+        if bank_id is None:
+            return
+        key = rec.get("key", "?")
+        try:
+            bank = lookup_bank(str(bank_id))
+        except ValueError as e:
+            raise StreamCorruptionError(
+                f"record {key!r}: unresolvable bank id {bank_id!r} "
+                f"({e})") from e
+        delta = rec.get("bank_delta")
+        chunk_sel = [int(getattr(ch, "bank_index", -1))
+                     for ch in obj.chunks]
+        if delta is not None:
+            if [int(d) for d in delta] != chunk_sel:
+                raise StreamCorruptionError(
+                    f"record {key!r}: bank_delta does not match the "
+                    f"payload's per-chunk bank selections")
+            if any(int(d) >= bank.n_books for d in delta):
+                raise StreamCorruptionError(
+                    f"record {key!r}: bank_delta indexes past the "
+                    f"bank's {bank.n_books} books")
+
     def _decode_group(self, batch: List[tuple]) -> List[tuple]:
         from ..core.ceaz import CEAZCompressed
         idx = [i for i, (_, obj) in enumerate(batch)
                if isinstance(obj, CEAZCompressed)]
+        for i in idx:
+            self._check_bank_record(batch[i][0], batch[i][1])
         if idx:
             t0 = time.perf_counter()
             dec = self._comp.decompress_batch(
@@ -673,6 +729,10 @@ class AsyncCompressWriteEngine:
       block_size: decode block grain recorded in the footer meta —
         REQUIRED (by the format spec) when ``compress_fn`` produces
         CEAZ payloads, so default readers can self-configure.
+      codebook_bank: ``CodebookBank.to_meta()`` dict recorded in the
+        footer meta — REQUIRED when ``compress_fn`` emits bank-coded
+        chunks, so default readers can resolve their codebooks
+        (docs/CODEBOOK_BANK.md).
 
     Raises:
       RuntimeError: on ``submit*`` after ``close``, and from
@@ -687,7 +747,8 @@ class AsyncCompressWriteEngine:
                  *, writers: int = 2, max_inflight: int = 2,
                  meta: Optional[Dict] = None, sync: bool = False,
                  emulate_bps: Optional[float] = None, fsync: bool = True,
-                 block_size: Optional[int] = None):
+                 block_size: Optional[int] = None,
+                 codebook_bank: Optional[Dict] = None):
         self._compress_fn = compress_fn
         self._serialize_fn = serialize_fn
         meta = dict(meta or {})
@@ -697,6 +758,11 @@ class AsyncCompressWriteEngine:
         # default readers can self-configure from the footer meta
         if block_size is not None:
             meta.setdefault("block_size", int(block_size))
+        # bank-mode self-description: the full bank artifact (lengths
+        # table, CodebookBank.to_meta()) rides in the footer meta so
+        # readers resolve bank-coded chunks without the trained artifact
+        if codebook_bank is not None:
+            meta.setdefault("codebook_bank", dict(codebook_bank))
         self._writer = StreamWriter(path, meta=meta,
                                     emulate_bps=emulate_bps, fsync=fsync)
         self._sync = sync
@@ -900,7 +966,11 @@ def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
         path, ceaz_compress_fn(comp, plan), writers=writers,
         max_inflight=max_inflight, meta=meta, sync=sync,
         emulate_bps=emulate_bps, fsync=fsync,
-        block_size=comp.cfg.block_size if comp is not None else 4096)
+        block_size=comp.cfg.block_size if comp is not None else 4096,
+        codebook_bank=(comp.bank.to_meta()
+                       if comp is not None
+                       and getattr(comp, "bank", None) is not None
+                       else None))
     with eng:
         shards = [np.asarray(s) for s in shards]
         group = max(1, group)

@@ -57,7 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import dualquant as core_dq
-from ..core.codebook import AdaptiveCoder
+from ..core.codebook import AdaptiveCoder, BankCoder
 from ..core.huffman import DEFAULT_MAX_LEN, NUM_SYMBOLS, Codebook
 from ..kernels import dispatch
 
@@ -472,7 +472,9 @@ def _assemble_chunks(p1: _Pass1, words_np, nbits_np, totals, outliers,
                               if decision.stored_codebook else None),
             codebook_id=decision.codebook.id,
             outlier_idx=oi, outlier_delta=od,
-            center=(int(p1.centers[i]) if p1.centers is not None else 0)))
+            center=(int(p1.centers[i]) if p1.centers is not None else 0),
+            bank_ref=getattr(decision, "bank_ref", ""),
+            bank_index=getattr(decision, "bank_index", -1)))
     return chunks
 
 
@@ -521,6 +523,215 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
                           word_bits=x.dtype.itemsize * 8,
                           predictor=predictor,
                           literal_idx=lit_idx, literal_val=lit_val)
+
+
+# ---------------------------------------------------------------------------
+# Single-pass bank mode (codebook='bank'): quantize -> select -> encode ->
+# pack in ONE traced computation, no host tree-build between the passes
+# ---------------------------------------------------------------------------
+
+# The provisioned pack grain: the single-pass trace cannot size its
+# output buffer from the data (that would be the host sync it exists to
+# delete), so it provisions for BANK_PROVISION_BITS bits/value — double
+# the capacity the shipped bank's books ever need on in-distribution
+# data — and the host re-packs (pack only: codes stay device-resident)
+# through _bank_repack_fn in the rare case a chunk's exact payload
+# (hist . lengths, known from the one transfer) exceeds it.
+BANK_PROVISION_BITS = 8
+
+
+def _bank_w32(bits_per_value: int, chunk_values: int) -> int:
+    """Static u32 provisioning for bits_per_value, trimmed like
+    words_capacity so the valid prefix cuts to whole uint64 words."""
+    need = 2 * ((chunk_values * int(bits_per_value) + 63) // 64 + 1)
+    return min(need, words_capacity(chunk_values))
+
+
+def _bank_fits(totals: np.ndarray, w32: int) -> bool:
+    """Whether every chunk's exact payload fits the provisioned pack."""
+    return 2 * ((int(totals.max()) + 63) // 64 + 1) <= w32
+
+
+@functools.lru_cache(maxsize=None)
+def _bank_pass_fn(kernel_impl: str, predictor: str, ndim: int,
+                  n_chunks: int, chunk_values: int, block_size: int,
+                  w32: int, cands: int, k_outlier: int, k_literal: int,
+                  stats_on_device: bool):
+    """Build (and cache) the fused single-pass trace for one work shape.
+
+    The returned jitted function runs quantize -> per-chunk histogram ->
+    bank selection (argmin over hist . lengths_k) -> gather the selected
+    rows -> Huffman encode + bit-pack as ONE traced computation. Nothing
+    crosses to the host between quantize and pack; the caller snapshots
+    the whole result tuple in a single transfer. The selection statistic
+    is integer and small (<= 16 * chunk_values per entry), so the host
+    drift replay in ``core.codebook.BankCoder`` reproduces the device
+    argmin bitwise. Outlier / literal-candidate compaction joins the
+    trace only on real accelerators (``stats_on_device``); on CPU hosts
+    the dense snapshots are cheaper than XLA scatters, exactly as in
+    :func:`_run_pass1`.
+    """
+    encode_pack = dispatch.resolve("hufenc", kernel_impl)
+    center_fn = (dispatch.resolve("dq_center", kernel_impl)
+                 if predictor == "none" else None)
+
+    @jax.jit
+    def run(work, eb, bank_lengths, bank_cwords):
+        if predictor == "none":
+            q2, valid2 = _value_prequantize(work, eb, n_chunks,
+                                            chunk_values)
+            centers = center_fn(q2, valid2)
+            codes2, outl2, delta2 = _value_finalize(q2, centers, valid2)
+            q = q2.reshape(-1)[:work.size]
+        else:
+            codes2, outl2, delta2, valid2, q = _quantize_pass(
+                work, eb, ndim, n_chunks, chunk_values)
+            centers = None
+        cidx = jnp.broadcast_to(
+            jnp.arange(n_chunks, dtype=jnp.int32)[:, None], codes2.shape)
+        hists = jnp.zeros((n_chunks, NUM_SYMBOLS), jnp.int32) \
+            .at[cidx, codes2].add(valid2.astype(jnp.int32))
+        costs = jnp.einsum("cs,ks->ck", hists, bank_lengths)
+        sel = jnp.argmin(costs, axis=1).astype(jnp.int32)
+        totals = jnp.take_along_axis(costs, sel[:, None], axis=1)[:, 0]
+        words, block_nbits = encode_pack(
+            codes2, valid2, bank_lengths[sel], bank_cwords[sel],
+            block_size, w32, cands)
+        if not stats_on_device:
+            return (hists, sel, totals, words, block_nbits,
+                    None, None, None, None, None, None,
+                    codes2, outl2, delta2, valid2, q, centers)
+        oidx, odelta, ocount = jax.vmap(
+            lambda m, d: _extract_sparse(m, d, k_outlier))(
+            outl2 & valid2, delta2)
+        work_flat = work.reshape(-1)
+        rec = q.astype(jnp.float32) * (2.0 * eb)
+        margin = 16.0 * _EPS32 * (jnp.abs(rec) + jnp.abs(work_flat)) \
+            + 1e-38
+        cand = jnp.abs(rec - work_flat) > (eb - margin)
+        lit_idx, lit_q, lit_count = _extract_sparse(cand, q, k_literal)
+        return (hists, sel, totals, words, block_nbits,
+                oidx, odelta, ocount, lit_idx, lit_q, lit_count,
+                codes2, outl2, delta2, valid2, q, centers)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _bank_repack_fn(kernel_impl: str, block_size: int, w32: int,
+                    cands: int):
+    """Pack-only retry at full bank capacity for provisioning overflow:
+    quantized codes never leave the device, only the pack re-runs."""
+    encode_pack = dispatch.resolve("hufenc", kernel_impl)
+
+    @jax.jit
+    def run(codes2, valid2, lengths_sel, cwords_sel):
+        return encode_pack(codes2, valid2, lengths_sel, cwords_sel,
+                           block_size, w32, cands)
+
+    return run
+
+
+def compress_error_bounded_bank(x: np.ndarray, eb: float, mode: str,
+                                coder: BankCoder, chunk_values: int,
+                                block_size: int,
+                                stats_on_device: Optional[bool] = None,
+                                kernel_impl: str = "auto",
+                                predictor: str = "lorenzo"):
+    """Single-pass fused compression against an offline codebook bank.
+
+    Unlike :func:`compress_error_bounded`, the per-chunk codebook comes
+    from the coder's pre-trained :class:`~repro.core.codebook.
+    CodebookBank` instead of a host tree-build, so the WHOLE encode —
+    quantize, histogram, bank selection, Huffman pack — runs as one
+    traced device pass with a single transfer at the end. The host then
+    replays the selection from the histogram summaries (``coder.step``)
+    to record per-chunk decisions and the drift statistic the ``CEAZ``
+    facade's fallback check consumes; the replay must agree with the
+    device argmin bitwise (asserted). When a chunk's exact payload
+    exceeds the BANK_PROVISION_BITS pack provisioning, only the pack
+    re-runs at full capacity (the quantized codes stay device-resident).
+    """
+    from ..core.ceaz import CEAZCompressed
+    bank = coder.bank
+    if stats_on_device is None:
+        stats_on_device = _default_stats_on_device()
+    chunk_values = max(1, min(chunk_values, int(x.size)))
+    n = int(x.size)
+    n_chunks, _ = chunk_layout(n, chunk_values)
+    if predictor == "none":
+        ndim = 1
+        work = jnp.asarray(x.reshape(-1), jnp.float32)
+    else:
+        ndim = min(x.ndim, 3)
+        work_shape = x.shape if x.ndim <= 3 else (-1,) + x.shape[-2:]
+        work = jnp.asarray(x.reshape(work_shape), jnp.float32)
+    w32 = _bank_w32(min(int(bank.lengths.max()), BANK_PROVISION_BITS),
+                    chunk_values)
+    w32_full = _bank_w32(int(bank.lengths.max()), chunk_values)
+    cands = _cand_window(int(bank.lengths.min()))
+    run = _bank_pass_fn(
+        kernel_impl, predictor, ndim, n_chunks, chunk_values, block_size,
+        w32, cands, _k_outlier(chunk_values), min(n, max(256, n // 256)),
+        stats_on_device)
+    (hists, sel, totals, words, block_nbits, oidx, odelta, ocount,
+     lit_idx, lit_q, lit_count, codes2, outl2, delta2, valid2, q,
+     centers) = run(
+        work, eb, jnp.asarray(bank.lengths, jnp.int32),
+        jnp.asarray(bank.code_table(), jnp.uint32))
+    # --- everything below is host assembly from the one transfer ---
+    hists_np = np.asarray(hists).astype(np.int64)
+    sel_np = np.asarray(sel)
+    totals_np = np.asarray(totals).astype(np.int64)
+    decisions = [coder.step(h) for h in hists_np]
+    for i, d in enumerate(decisions):
+        # the host replay of the selection statistic must land on the
+        # same bank row the device argmin picked (integer-exact)
+        assert d.bank_index == int(sel_np[i])
+    if w32 < w32_full and not _bank_fits(totals_np, w32):
+        lengths_np, cwords_np = _codebook_tables(decisions)
+        words, block_nbits = _bank_repack_fn(
+            kernel_impl, block_size, w32_full, cands)(
+            codes2, valid2, jnp.asarray(lengths_np),
+            jnp.asarray(cwords_np))
+    centers_np = (np.asarray(centers).astype(np.int64)
+                  if centers is not None else None)
+    if stats_on_device:
+        p1 = _Pass1(None, outl2, delta2, valid2, None, hists_np, n,
+                    n_chunks, chunk_values, True, lit_idx=lit_idx,
+                    lit_q=lit_q, lit_count=lit_count,
+                    predictor=predictor, centers=centers_np)
+        oidx_np, odelta_np = np.asarray(oidx), np.asarray(odelta)
+        ocount_np = np.asarray(ocount)
+        k = oidx_np.shape[1]
+        outliers = []
+        for i in range(n_chunks):
+            c = int(ocount_np[i])
+            if c <= k:
+                outliers.append((oidx_np[i, :c].astype(np.int64),
+                                 odelta_np[i, :c].astype(np.int32)))
+            else:   # overflow: dense host fallback for this chunk
+                m = np.asarray(outl2[i] & valid2[i])
+                oi = np.flatnonzero(m).astype(np.int64)
+                outliers.append((oi, np.asarray(delta2[i])[oi]
+                                 .astype(np.int32)))
+    else:
+        p1 = _Pass1(None, None, None, None, None, hists_np, n, n_chunks,
+                    chunk_values, False,
+                    outl_host=np.asarray(outl2),
+                    delta_host=np.asarray(delta2),
+                    q_host=np.asarray(q),
+                    predictor=predictor, centers=centers_np)
+        outliers = _outliers(p1)
+    chunks = _assemble_chunks(p1, np.asarray(words),
+                              np.asarray(block_nbits), totals_np,
+                              outliers, eb, decisions, block_size)
+    lit_i, lit_v = _literals(p1, x.reshape(-1), eb, ndim, work.shape)
+    return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
+                          mode=mode, chunks=chunks,
+                          word_bits=x.dtype.itemsize * 8,
+                          predictor=predictor,
+                          literal_idx=lit_i, literal_val=lit_v)
 
 
 def _spec_window(speculation) -> int:
@@ -725,7 +936,7 @@ def _policy(hists: np.ndarray, coder: AdaptiveCoder, adaptive: bool,
     from ..core.codebook import AdaptiveDecision
     decisions = []
     for freqs in hists.astype(np.int64):
-        if adaptive:
+        if isinstance(coder, BankCoder) or adaptive:
             decisions.append(coder.step(freqs))
         else:
             cb = Codebook.from_freqs(freqs, exact=exact_build)

@@ -157,9 +157,10 @@ class _ChunkBatch:
         self.books: List[Codebook] = []
         self.spans: List[Tuple[int, int]] = []     # comp -> row range
 
-    def add_comp(self, c, offline: Codebook):
+    def add_comp(self, c, offline: Codebook, bank=None):
         row0 = len(self.counts)
-        for ch, book in zip(c.chunks, replay_codebooks(c.chunks, offline)):
+        for ch, book in zip(c.chunks,
+                            replay_codebooks(c.chunks, offline, bank=bank)):
             self.words.append(_u64_to_u32(ch.words))
             self.nbits.append(np.asarray(ch.block_nbits, np.int64))
             self.counts.append(int(ch.n_values))
@@ -266,19 +267,22 @@ def decompress_one(codes_rows, c) -> np.ndarray:
 
 def decompress_batch(comps: Sequence, block_size: int,
                      offline: Codebook,
-                     kernel_impl: str = "auto") -> List[np.ndarray]:
+                     kernel_impl: str = "auto",
+                     bank=None) -> List[np.ndarray]:
     """Fused decode of a group of CEAZCompressed streams.
 
     All chunks of all arrays share ONE batched Huffman-decode pass
     (`kernel_impl` selects its implementation through the dispatch
     registry); the inverse-quant pass then runs per array (its cumsum
-    rank and shape are array-specific). Callers must pre-filter
+    rank and shape are array-specific). Bank-mode chunks resolve their
+    codebooks through `bank` / the process bank registry (see
+    ``core.huffman.replay_codebooks``). Callers must pre-filter
     eligibility with ``fused_decode_ok`` — the ``CEAZ.decompress_batch``
     facade does.
     """
     batch = _ChunkBatch(block_size, kernel_impl)
     for c in comps:
-        batch.add_comp(c, offline)
+        batch.add_comp(c, offline, bank=bank)
     if not batch.counts:
         return []
     codes_all = batch.run()

@@ -27,6 +27,13 @@ def test_slugify_matches_github_style():
         == "the-ceazs-stream-format-v1"
 
 
+def test_codebook_bank_spec_doctests():
+    path = os.path.join(REPO, "docs", "CODEBOOK_BANK.md")
+    results = doctest.testfile(path, module_relative=False)
+    assert results.attempted > 0
+    assert results.failed == 0
+
+
 def test_api_walkthrough_doctests():
     import importlib.util
     path = os.path.join(REPO, "examples", "api_walkthrough.py")
