@@ -1,15 +1,32 @@
-"""Shared benchmark utilities: corpus cache, timing, CSV/JSON output."""
+"""Shared benchmark utilities: corpus cache, timing, CSV/JSON output.
+
+Every lane's detail JSON is a schema-versioned record (docs/
+OBSERVABILITY.md):
+
+    {"schema": 2, "run_id": "<one id per harness process>",
+     "name": "<lane>", "us_per_call": f, "derived": "...",
+     "metrics": {...},        # canonical repro.obs.metrics names
+     "rows": [...]}           # the lane's detail rows (schema-1 body)
+
+so the nightly ``BENCH_*`` artifacts and runtime telemetry speak the
+same metric vocabulary. ``load_record`` reads either schema back
+(schema 1 was a bare rows list)."""
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 SIZE = os.environ.get("REPRO_BENCH_SIZE", "small")
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+SCHEMA = 2
+# one id per harness process: every lane emitted by the same
+# `python -m benchmarks.run` invocation shares it
+RUN_ID = f"{time.strftime('%Y%m%dT%H%M%S')}-{os.getpid()}"
 
 _corpus_cache: Dict[str, List[Tuple[str, np.ndarray]]] = {}
 
@@ -34,10 +51,31 @@ def time_call(fn: Callable, *args, repeats: int = 3, **kw):
 
 
 def emit(name: str, rows: List[Dict], us_per_call: float = 0.0,
-         derived: str = ""):
-    """Print the harness CSV line + dump detail JSON."""
+         derived: str = "", metrics: Optional[Dict] = None):
+    """Print the harness CSV line + dump the schema-2 detail record.
+
+    `metrics` carries canonical ``repro.obs.metrics`` names (typically a
+    snapshot-diff scoped to this lane, plus lane-specific derived
+    figures); lanes that don't pass one still get the versioned
+    envelope with an empty dict.
+    """
     os.makedirs(OUT_DIR, exist_ok=True)
+    record = {"schema": SCHEMA, "run_id": RUN_ID, "name": name,
+              "us_per_call": us_per_call, "derived": derived,
+              "metrics": dict(metrics or {}), "rows": rows}
     with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
-        json.dump(rows, f, indent=1, default=float)
+        json.dump(record, f, indent=1, default=float)
     print(f"{name},{us_per_call:.1f},{derived}")
     return rows
+
+
+def load_record(name: str, out_dir: Optional[str] = None) -> Dict:
+    """Read a lane's detail JSON back as a schema-2 record; a schema-1
+    bare rows list is wrapped so consumers see one shape."""
+    with open(os.path.join(out_dir or OUT_DIR, f"{name}.json")) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):                      # schema 1
+        return {"schema": 1, "run_id": "", "name": name,
+                "us_per_call": 0.0, "derived": "", "metrics": {},
+                "rows": doc}
+    return doc

@@ -19,6 +19,7 @@ import sys
 import numpy as np
 
 from repro.core import CEAZ, CEAZConfig, default_offline_codebook, psnr
+from repro.obs import metrics as om
 
 from .common import corpus, emit, time_call
 
@@ -61,6 +62,7 @@ def run_speculation():
     win" refers to; per-value device work is identical on both paths.
     Gate: byte-identical output AND >= 1.5x on this >= 8-chunk stream.
     """
+    snap0 = om.snapshot()
     offline_cb = default_offline_codebook()
     rng = np.random.default_rng(7)
     n_chunks, cv = 32, 8192
@@ -88,7 +90,9 @@ def run_speculation():
     emit("fixed_ratio_speculation", rows,
          us_per_call=t_spec * 1e6,
          derived=f"speedup={speedup:.2f}x;byte_identical={ident};"
-                 f"gate>=1.5x")
+                 f"gate>=1.5x",
+         metrics={**om.diff(om.snapshot(), snap0),
+                  "speculative_over_sequential": speedup})
     assert ident, "speculative stream differs from sequential oracle"
     assert speedup >= 1.5, (
         f"speculative fixed-ratio only {speedup:.2f}x over sequential")

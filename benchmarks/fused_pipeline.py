@@ -19,6 +19,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import CEAZ, CEAZConfig, default_offline_codebook
+from repro.obs import metrics as om
 
 from .common import corpus, emit, time_call
 
@@ -30,6 +31,7 @@ def _comp(offline_cb, **kw):
 
 
 def run():
+    snap0 = om.snapshot()
     offline_cb = default_offline_codebook()
     variants = {
         "staged_numpy": _comp(offline_cb, backend="numpy", use_fused=False),
@@ -58,7 +60,10 @@ def run():
          derived=(f"fused={tp['fused']:.0f}MB/s;"
                   f"staged_jax={tp['staged_jax']:.0f}MB/s;"
                   f"staged_numpy={tp['staged_numpy']:.0f}MB/s;"
-                  f"speedup={speedup:.2f}x"))
+                  f"speedup={speedup:.2f}x"),
+         metrics={**om.diff(om.snapshot(), snap0),
+                  "fused_throughput_mbs": tp["fused"],
+                  "fused_over_staged_jax": speedup})
     assert speedup >= 1.0, (
         f"fused pipeline slower than staged ({speedup:.2f}x)")
     return rows

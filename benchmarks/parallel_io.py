@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import CEAZ, CEAZConfig, default_offline_codebook
 from repro.io.filewrite import parallel_compressed_write
+from repro.obs import metrics as om
 
 from .common import corpus, emit
 
@@ -68,6 +69,7 @@ def model_throughput(data_per_node: float, nodes: int, cr: float,
 
 
 def run():
+    snap0 = om.snapshot()
     crs = _measured_crs()
     rows = []
     # use NYX/S3D proxies at eb 1e-3 like the paper's Fig 17
@@ -88,7 +90,10 @@ def run():
     worst_sz1 = min(r["sz1_speedup"] for r in rows if r["nodes"] == 128)
     emit("parallel_io", rows,
          derived=f"ceaz_speedup@128={best:.1f}x(paper<=25.8x);"
-                 f"sz1_speedup@128={worst_sz1:.2f}x(paper~0.9x)")
+                 f"sz1_speedup@128={worst_sz1:.2f}x(paper~0.9x)",
+         metrics={**om.diff(om.snapshot(), snap0),
+                  "ceaz_speedup_at_128": best,
+                  "sz1_speedup_at_128": worst_sz1})
     return rows
 
 
@@ -151,6 +156,7 @@ def run_overlap(gate: bool = False, threshold: float = 1.3):
     import shutil
     import tempfile
     rows = []
+    snap0 = om.snapshot()
     tmp = tempfile.mkdtemp(prefix="ceaz_overlap_")
     try:
         # warm up jit caches so compile time doesn't pollute either path
@@ -182,7 +188,10 @@ def run_overlap(gate: bool = False, threshold: float = 1.3):
     med = balanced[len(balanced) // 2]
     emit("parallel_io_overlap", rows,
          derived=f"overlap_speedup_median={med:.2f}x(gate>={threshold}x);"
-                 f"best={max(balanced):.2f}x")
+                 f"best={max(balanced):.2f}x",
+         metrics={**om.diff(om.snapshot(), snap0),
+                  "overlap_speedup_median": med,
+                  "overlap_speedup_best": max(balanced)})
     if gate and med < threshold:
         print(f"FAIL: async/sync speedup {med:.2f}x < {threshold}x")
         sys.exit(1)

@@ -1,16 +1,29 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines (and writes detail JSON under
-results/bench/). REPRO_BENCH_SIZE=medium scales the proxy datasets to
-benchmark-grade sizes.
+Prints ``name,us_per_call,derived`` CSV lines and writes one
+schema-versioned detail record per lane (see ``common.emit``) under
+results/bench/ — or under ``--json-dir`` to consolidate a run's JSON in
+one place (the CI artifact step and local A/B comparisons both point it
+at a fresh directory). REPRO_BENCH_SIZE=medium scales the proxy
+datasets to benchmark-grade sizes.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="CEAZ benchmark harness (all lanes)")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="write every lane's detail JSON under DIR "
+                         "(default: results/bench or $REPRO_BENCH_OUT)")
+    args = ap.parse_args(argv)
+    from . import common
+    if args.json_dir:
+        common.OUT_DIR = args.json_dir
     from . import (chi_thresholds, fixed_ratio, fused_decode,
                    fused_pipeline, kernel_microbench, offline_codewords,
                    parallel_io, ratio_distortion, roofline_report,

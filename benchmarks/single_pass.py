@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core import CEAZ, CEAZConfig
 from repro.core.codebook import BankCoder
+from repro.obs import metrics as om
 
 from .common import emit, time_call
 
@@ -54,6 +55,7 @@ def _drifting_stream(n_chunks: int, chunk_values: int, eb: float,
 
 
 def run():
+    snap0 = om.snapshot()
     eb = 1e-3
     n_chunks, cv = 32, 8192
     x = _drifting_stream(n_chunks, cv, eb)
@@ -109,7 +111,11 @@ def run():
                  ood_byte_identical=bool(ident))]
     emit("single_pass", rows, us_per_call=t_bank * 1e6,
          derived=f"speedup={speedup:.2f}x;drift={drift:.3f};"
-                 f"ood_fallback={fallback};gate>={GATE_SPEEDUP}x")
+                 f"ood_fallback={fallback};gate>={GATE_SPEEDUP}x",
+         metrics={**om.diff(om.snapshot(), snap0),
+                  "bank_vs_exact_speedup": speedup,
+                  "bank_drift_in_distribution": drift,
+                  "bank_drift_ood": ood_coder.drift()})
     assert fallback, (
         f"drift fallback did not engage on OOD input "
         f"(drift {ood_coder.drift():.3f})")

@@ -25,6 +25,8 @@ from typing import List, Optional
 import numpy as np
 
 from . import dualquant as dq
+from ..obs import metrics as om
+from ..obs import trace as ot
 from .codebook import (DEFAULT_BANK_DRIFT_TOL, DEFAULT_TAU0, DEFAULT_TAU1,
                        AdaptiveCoder, BankCoder, CodebookBank,
                        min_update_bytes, sigma_of)
@@ -176,6 +178,12 @@ class CEAZConfig:
     # codebook='exact'). The check replays from histogram summaries —
     # no second quantization unless it actually trips.
     bank_drift_tol: float = DEFAULT_BANK_DRIFT_TOL
+    # Observability (docs/OBSERVABILITY.md): a path here turns on the
+    # process span tracer at facade construction and saves a Chrome
+    # trace_event JSON there at exit — same effect as CEAZ_TRACE=path.
+    # Pipeline counters (repro.obs.metrics) are always on; tracing is
+    # the only opt-in.
+    trace: Optional[str] = None
 
 
 class CEAZ:
@@ -203,6 +211,8 @@ class CEAZ:
         elif kw:
             config = dataclasses.replace(config, **kw)
         self.cfg = config
+        if config.trace:
+            ot.enable(config.trace)
         if offline_codebook is None:
             from .codebook import default_offline_codebook
             offline_codebook = default_offline_codebook()
@@ -311,17 +321,35 @@ class CEAZ:
                 predictor="none" if self.cfg.predictor == "none"
                 else "lorenzo")
         fused_ok = self.cfg.use_fused
-        if not self._bank_mode():
-            return self._compress_routed(x, word_bits, fused_ok,
-                                         self._coder())
-        coder = BankCoder(self.bank)
-        c = self._compress_routed(x, word_bits, fused_ok, coder)
-        if coder.drift() > self.cfg.bank_drift_tol:
-            # out-of-distribution input: fall back to the exact two-pass
-            # path for the whole array (drift is replayed on host from
-            # the histogram summaries the bank pass already produced)
-            return self._compress_routed(x, word_bits, fused_ok,
-                                         self._coder())
+        with ot.span("ceaz.compress", shape=list(x.shape),
+                     dtype=str(x.dtype), mode=self.cfg.mode):
+            if not self._bank_mode():
+                return self._note_compressed(
+                    x, self._compress_routed(x, word_bits, fused_ok,
+                                             self._coder()))
+            coder = BankCoder(self.bank)
+            c = self._compress_routed(x, word_bits, fused_ok, coder)
+            om.set_gauge(om.BANK_DRIFT, coder.drift())
+            if coder.drift() > self.cfg.bank_drift_tol:
+                # out-of-distribution input: fall back to the exact
+                # two-pass path for the whole array (drift is replayed on
+                # host from the histogram summaries the bank pass already
+                # produced)
+                om.add(om.BANK_FALLBACKS)
+                with ot.span("ceaz.bank_exact_fallback",
+                             drift=coder.drift()):
+                    return self._note_compressed(
+                        x, self._compress_routed(x, word_bits, fused_ok,
+                                                 self._coder()))
+            return self._note_compressed(x, c)
+
+    @staticmethod
+    def _note_compressed(x: np.ndarray, c: CEAZCompressed) -> CEAZCompressed:
+        """The one choke point every finished encode flows through:
+        bumps the process-wide chunk/byte counters (repro.obs.metrics)."""
+        om.add(om.CHUNKS, len(c.chunks))
+        om.add(om.RAW_BYTES, int(x.nbytes))
+        om.add(om.STORED_BYTES, c.nbytes())
         return c
 
     def _compress_routed(self, x: np.ndarray, word_bits: int,
@@ -376,19 +404,24 @@ class CEAZ:
             for (_, dtype, pred), idxs in groups.items():
                 if len(idxs) < 2:
                     continue        # per-shard fused compress below
-                outs = fused.batch_compress(
-                    [shards[i] for i in idxs], self.cfg.eb,
-                    self._chunk_values(dtype.itemsize * 8),
-                    self.cfg.block_size, offline=self.offline, plan=plan,
-                    mode=self.cfg.mode, tau0=self.cfg.tau0,
-                    tau1=self.cfg.tau1, adaptive=self.cfg.adaptive,
-                    exact_build=self.cfg.exact_build,
-                    kernel_impl=self.cfg.kernel_impl, predictor=pred)
+                with ot.span("ceaz.batch_fused_pass", n=len(idxs),
+                             predictor=pred):
+                        outs = fused.batch_compress(
+                        [shards[i] for i in idxs], self.cfg.eb,
+                        self._chunk_values(dtype.itemsize * 8),
+                        self.cfg.block_size, offline=self.offline,
+                        plan=plan, mode=self.cfg.mode, tau0=self.cfg.tau0,
+                        tau1=self.cfg.tau1, adaptive=self.cfg.adaptive,
+                        exact_build=self.cfg.exact_build,
+                        kernel_impl=self.cfg.kernel_impl, predictor=pred)
                 for i, c in zip(idxs, outs):
                     out[i] = c
-        return [c if c is not None
-                else (self._compress_eb_fused(s, preds[i]) if i in preds
-                      else self.compress(s))
+        # counters: shards routed through compress() below count there;
+        # batched / per-shard-fused results count here
+        return [self._note_compressed(s, c) if c is not None
+                else (self._note_compressed(
+                          s, self._compress_eb_fused(s, preds[i]))
+                      if i in preds else self.compress(s))
                 for i, (c, s) in enumerate(zip(out, shards))]
 
     def _coder(self) -> AdaptiveCoder:
@@ -569,21 +602,26 @@ class CEAZ:
         """
         comps = list(comps)
         out: List[Optional[np.ndarray]] = [None] * len(comps)
-        if self.cfg.use_fused:
-            from ..runtime import fused_decode as FD
-            fused_idx = [i for i, c in enumerate(comps)
-                         if FD.fused_decode_ok(c, self.offline)]
-            if fused_idx:
-                for i in fused_idx:
-                    self._check_block_size(comps[i])
-                dec = FD.decompress_batch([comps[i] for i in fused_idx],
-                                          self.cfg.block_size, self.offline,
-                                          kernel_impl=self.cfg.kernel_impl,
-                                          bank=self.bank)
-                for i, a in zip(fused_idx, dec):
-                    out[i] = a
-        return [a if a is not None else self._decompress_staged(c)
-                for a, c in zip(out, comps)]
+        with ot.span("ceaz.decompress_batch", n=len(comps)):
+            if self.cfg.use_fused:
+                from ..runtime import fused_decode as FD
+                fused_idx = [i for i, c in enumerate(comps)
+                             if FD.fused_decode_ok(c, self.offline)]
+                if fused_idx:
+                    for i in fused_idx:
+                        self._check_block_size(comps[i])
+                    dec = FD.decompress_batch(
+                        [comps[i] for i in fused_idx],
+                        self.cfg.block_size, self.offline,
+                        kernel_impl=self.cfg.kernel_impl, bank=self.bank)
+                    for i, a in zip(fused_idx, dec):
+                        out[i] = a
+            res = [a if a is not None else self._decompress_staged(c)
+                   for a, c in zip(out, comps)]
+        for c, a in zip(comps, res):
+            om.add(om.DECODED_CHUNKS, len(c.chunks))
+            om.add(om.DECODED_BYTES, int(a.nbytes))
+        return res
 
     def _check_block_size(self, c: CEAZCompressed):
         """Decode needs the encoder's block_size: the wire format carries

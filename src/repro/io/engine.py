@@ -64,6 +64,10 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import manifest as _manifest
+from ..obs import metrics as om
+from ..obs import trace as ot
+
 STREAM_MAGIC = b"CEAZS\x01\x00\x00"
 END_MAGIC = b"CEAZSEND"
 RECORD_MAGIC = b"SHRD"
@@ -73,7 +77,16 @@ STREAM_FORMAT_VERSION = 1
 
 
 class StreamCorruptionError(IOError):
-    """The stream failed a structural or checksum validation."""
+    """The stream failed a structural or checksum validation.
+
+    Every construction bumps the process-wide
+    ``ceaz_stream_corruption_total`` counter (repro.obs.metrics) — the
+    single choke point all read-side validation failures flow through.
+    """
+
+    def __init__(self, *args):
+        super().__init__(*args)
+        om.add(om.CORRUPTION)
 
 
 # ---------------------------------------------------------------------------
@@ -368,6 +381,13 @@ class StreamReader:
         """Random access by record key (footer-index lookup)."""
         return self.read_seq(self.seq_of(key))
 
+    def telemetry(self) -> Optional[Dict]:
+        """The telemetry manifest embedded under the footer meta's
+        optional ``telemetry`` key (docs/OBSERVABILITY.md), or None.
+        The key is never load-bearing for decode: a stream without it
+        (or with a malformed value) reads back identically."""
+        return _manifest.from_meta(self.meta)
+
     def iter_objects(self) -> Iterator[tuple]:
         for i, rec in enumerate(self.records):
             yield rec, self.read_object(i)
@@ -400,27 +420,79 @@ def _overlap_efficiency(stage_a_s: float, stage_b_s: float,
     return max(0.0, min(1.0, (serial - wall_s) / (serial - busy)))
 
 
-@dataclasses.dataclass
-class ReadStats:
+def _stat_field(name: str):
+    """Read-only property exposing one per-engine metric as the
+    familiar stats attribute (`st.compress_s`, `st.n_records`, ...)."""
+    def get(self):
+        return self._reg.counter("ceaz_engine_" + name).value()
+    get.__name__ = name
+    return property(get)
+
+
+class _StatsView:
+    """Per-run engine accounting, backed by a scoped
+    :class:`repro.obs.metrics.MetricsRegistry` instead of ad-hoc
+    mutable fields. The public attributes the consumers have always
+    read (``wall_s``, ``compress_s``, ...) are views over that
+    registry; the registry itself is reachable as ``.registry`` for
+    Prometheus/JSON export of a single run.
+
+    ``wall_s`` is set ONCE, at the engine's terminal state (end of
+    iteration, ``close`` or the first error surfaced) — it never moves
+    on a later ``close()`` (regression: tests/test_engine.py).
+    """
+
+    _FIELDS: tuple = ()
+
+    def __init__(self):
+        self._reg = om.MetricsRegistry()
+        self._wall: Optional[float] = None
+
+    @property
+    def registry(self) -> om.MetricsRegistry:
+        return self._reg
+
+    def add(self, field: str, n) -> None:
+        """Accumulate into one stats field (engine-internal)."""
+        self._reg.counter("ceaz_engine_" + field).add(n)
+
+    @property
+    def wall_s(self) -> float:
+        return 0.0 if self._wall is None else self._wall
+
+    def finalize_wall(self, t0: float) -> float:
+        """Stamp ``wall_s`` from `t0` if and only if it is unset —
+        every terminal path (normal completion, error, close) funnels
+        through here, so the first one wins and reruns are no-ops."""
+        if self._wall is None:
+            self._wall = time.perf_counter() - t0
+        return self._wall
+
+    def as_dict(self) -> Dict:
+        d = {f: getattr(self, f) for f in self._FIELDS}
+        d["wall_s"] = self.wall_s
+        d["overlap_efficiency"] = self.overlap_efficiency()
+        return d
+
+    def overlap_efficiency(self) -> float:
+        raise NotImplementedError
+
+
+class ReadStats(_StatsView):
     """Per-run accounting for the decode read engine; `read_s` is the
     prefetch thread's file+deserialize time, `decode_s` the device
     decode time the prefetch overlapped with."""
-    n_records: int = 0
-    stored_bytes: int = 0
-    raw_bytes: int = 0
-    wall_s: float = 0.0
-    read_s: float = 0.0
-    decode_s: float = 0.0
+
+    _FIELDS = ("n_records", "stored_bytes", "raw_bytes", "read_s",
+               "decode_s")
+    n_records = _stat_field("n_records")
+    stored_bytes = _stat_field("stored_bytes")
+    raw_bytes = _stat_field("raw_bytes")
+    read_s = _stat_field("read_s")
+    decode_s = _stat_field("decode_s")
 
     def overlap_efficiency(self) -> float:
         return _overlap_efficiency(self.read_s, self.decode_s, self.wall_s)
-
-    def as_dict(self) -> Dict:
-        return {"n_records": self.n_records,
-                "stored_bytes": self.stored_bytes,
-                "raw_bytes": self.raw_bytes, "wall_s": self.wall_s,
-                "read_s": self.read_s, "decode_s": self.decode_s,
-                "overlap_efficiency": self.overlap_efficiency()}
 
 
 class AsyncDecodeReadEngine:
@@ -528,22 +600,29 @@ class AsyncDecodeReadEngine:
     def __len__(self) -> int:
         return len(self._reader)
 
+    @property
+    def telemetry(self):
+        """The underlying reader's ``telemetry()`` accessor."""
+        return self._reader.telemetry
+
     # -- pipeline stages -----------------------------------------------------
     def _read_one(self, i: int):
         t0 = time.perf_counter()
-        obj = self._reader.read_object(i)      # header+crc32 verified
-        self.stats.read_s += time.perf_counter() - t0
+        with ot.span("reader.prefetch", seq=i):
+            obj = self._reader.read_object(i)  # header+crc32 verified
+        self.stats.add("read_s", time.perf_counter() - t0)
         return self._reader.records[i], obj
 
     def _put(self, item) -> bool:
         """Bounded put that gives up when the consumer went away —
         backpressure without deadlocking an abandoned engine."""
-        while not self._stop:
-            try:
-                self._q.put(item, timeout=0.1)
-                return True
-            except queue.Full:
-                continue
+        with ot.span("reader.backpressure_stall"):
+            while not self._stop:
+                try:
+                    self._q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
         return False
 
     def _prefetch_loop(self):
@@ -591,16 +670,17 @@ class AsyncDecodeReadEngine:
             self._check_bank_record(batch[i][0], batch[i][1])
         if idx:
             t0 = time.perf_counter()
-            dec = self._comp.decompress_batch(
-                [batch[i][1] for i in idx])
-            self.stats.decode_s += time.perf_counter() - t0
+            with ot.span("reader.decode_group", n=len(idx)):
+                dec = self._comp.decompress_batch(
+                    [batch[i][1] for i in idx])
+            self.stats.add("decode_s", time.perf_counter() - t0)
             for i, arr in zip(idx, dec):
                 batch[i] = (batch[i][0], arr)
         for rec, obj in batch:
-            self.stats.n_records += 1
-            self.stats.stored_bytes += int(rec.get("nbytes", 0))
+            self.stats.add("n_records", 1)
+            self.stats.add("stored_bytes", int(rec.get("nbytes", 0)))
             if isinstance(obj, np.ndarray):
-                self.stats.raw_bytes += int(obj.nbytes)
+                self.stats.add("raw_bytes", int(obj.nbytes))
         return batch
 
     # -- public API ----------------------------------------------------------
@@ -620,29 +700,32 @@ class AsyncDecodeReadEngine:
                 batch = [self._read_one(i)
                          for i in range(s, min(s + self._group, n))]
                 yield from self._decode_group(batch)
-            self.stats.wall_s = time.perf_counter() - self._t0
+            self.stats.finalize_wall(self._t0)
             return
         batch: List[tuple] = []
         done = False
         while not done:
-            item = self._q.get()
+            with ot.span("reader.queue_wait"):
+                item = self._q.get()
             if item is _SENTINEL:
                 done = True
             elif isinstance(item, tuple) and item[0] == "__error__":
                 self._stop = True
+                self.stats.finalize_wall(self._t0)  # terminal: error
                 raise item[1]
             else:
                 batch.append(item)
             if batch and (done or len(batch) >= self._group):
                 yield from self._decode_group(batch)
                 batch = []
-        self.stats.wall_s = time.perf_counter() - self._t0
+        self.stats.finalize_wall(self._t0)
 
     def objects(self) -> List[tuple]:
         return list(self)
 
     def close(self):
         self._stop = True
+        self.stats.finalize_wall(self._t0)      # terminal if not already
         if not self._sync:
             self._prefetcher.join(timeout=5.0)
             while True:                         # unblock a parked put
@@ -675,18 +758,22 @@ def read_stream_arrays(path: str, comp=None, *, group: int = 8,
 _SENTINEL = object()
 
 
-@dataclasses.dataclass
-class EngineStats:
+class EngineStats(_StatsView):
     """Per-run accounting; `overlap_efficiency` is how much of the
     compress+write cost the pipeline hid (1.0 = perfect overlap)."""
-    n_records: int = 0
-    raw_bytes: int = 0
-    stored_bytes: int = 0
-    wall_s: float = 0.0
-    compress_s: float = 0.0
-    serialize_s: float = 0.0
-    write_s: float = 0.0
-    records: List[Dict] = dataclasses.field(default_factory=list)
+
+    _FIELDS = ("n_records", "raw_bytes", "stored_bytes", "compress_s",
+               "serialize_s", "write_s")
+    n_records = _stat_field("n_records")
+    raw_bytes = _stat_field("raw_bytes")
+    stored_bytes = _stat_field("stored_bytes")
+    compress_s = _stat_field("compress_s")
+    serialize_s = _stat_field("serialize_s")
+    write_s = _stat_field("write_s")
+
+    def __init__(self):
+        super().__init__()
+        self.records: List[Dict] = []
 
     def ratio(self) -> float:
         return self.raw_bytes / max(self.stored_bytes, 1)
@@ -696,12 +783,10 @@ class EngineStats:
                                    self.wall_s)
 
     def as_dict(self) -> Dict:
-        return {"n_records": self.n_records, "raw_bytes": self.raw_bytes,
-                "stored_bytes": self.stored_bytes, "ratio": self.ratio(),
-                "wall_s": self.wall_s, "compress_s": self.compress_s,
-                "serialize_s": self.serialize_s, "write_s": self.write_s,
-                "overlap_efficiency": self.overlap_efficiency(),
-                "records": self.records}
+        d = super().as_dict()
+        d["ratio"] = self.ratio()
+        d["records"] = self.records
+        return d
 
 
 class AsyncCompressWriteEngine:
@@ -733,6 +818,14 @@ class AsyncCompressWriteEngine:
         footer meta — REQUIRED when ``compress_fn`` emits bank-coded
         chunks, so default readers can resolve their codebooks
         (docs/CODEBOOK_BANK.md).
+      config: the compression config (``CEAZConfig`` or dict) behind
+        ``compress_fn``; fingerprinted into the telemetry manifest so a
+        stream records what produced it (docs/OBSERVABILITY.md).
+      telemetry: embed the per-stream telemetry manifest (config
+        fingerprint, per-record stage timings, ratio summary) under the
+        footer meta's ``telemetry`` key. Optional and never
+        load-bearing for decode; the built manifest is exposed as
+        ``engine.manifest`` after ``close``.
 
     Raises:
       RuntimeError: on ``submit*`` after ``close``, and from
@@ -748,9 +841,17 @@ class AsyncCompressWriteEngine:
                  meta: Optional[Dict] = None, sync: bool = False,
                  emulate_bps: Optional[float] = None, fsync: bool = True,
                  block_size: Optional[int] = None,
-                 codebook_bank: Optional[Dict] = None):
+                 codebook_bank: Optional[Dict] = None,
+                 config: Any = None, telemetry: bool = True):
         self._compress_fn = compress_fn
         self._serialize_fn = serialize_fn
+        self._config = config
+        self._telemetry = telemetry
+        self.manifest: Optional[Dict] = None
+        # per-record / per-batch timing rows for the stream manifest;
+        # each list is touched by exactly one pipeline thread
+        self._rec_rows: List[Dict] = []
+        self._batch_rows: List[Dict] = []
         meta = dict(meta or {})
         # self-description: readers must decode with the block grain the
         # stream was compressed with — consumers whose compress stage
@@ -786,7 +887,12 @@ class AsyncCompressWriteEngine:
 
     # -- pipeline stages -----------------------------------------------------
     def _compress(self, keys, items):
-        objs = self._compress_fn(keys, items)
+        t0 = time.perf_counter()
+        with ot.span("engine.compress", n=len(keys)):
+            objs = self._compress_fn(keys, items)
+        el = time.perf_counter() - t0
+        self.stats.add("compress_s", el)
+        self._batch_rows.append({"keys": list(keys), "compress_s": el})
         if len(objs) != len(keys):      # a silent drop would finalize a
             raise RuntimeError(         # "successful" stream missing shards
                 f"compress_fn returned {len(objs)} payloads "
@@ -795,24 +901,34 @@ class AsyncCompressWriteEngine:
 
     def _serialize_one(self, obj):
         t0 = time.perf_counter()
-        payload, meta = self._serialize_fn(obj)
+        with ot.span("engine.serialize"):
+            payload, meta = self._serialize_fn(obj)
         return payload, meta, time.perf_counter() - t0
 
     def _compress_loop(self):
         while True:
-            batch = self._cq.get()
+            with ot.span("engine.queue_wait", queue="compress"):
+                batch = self._cq.get()
+            om.set_gauge(om.QUEUE_DEPTH, self._cq.qsize(),
+                         queue="compress")
             if batch is _SENTINEL:
                 self._wq.put(_SENTINEL)
                 return
             keys, items, metas = batch
             try:
-                t0 = time.perf_counter()
                 objs = self._compress(keys, items)
-                self.stats.compress_s += time.perf_counter() - t0
                 for key, obj, m in zip(keys, objs, metas):
                     fut = self._pool.submit(self._serialize_one, obj)
-                    self._wq.put((key, fut, m))     # bounded: backpressure
+                    with ot.span("engine.backpressure_stall",
+                                 queue="commit"):
+                        self._wq.put((key, fut, m))  # bounded: backpressure
+                    om.set_gauge(om.QUEUE_DEPTH, self._wq.qsize(),
+                                 queue="commit")
             except BaseException as e:              # propagate via close()
+                # stamp the wall clock BEFORE publishing the error: the
+                # producer raises out of submit() the moment it sees
+                # _error, and must observe a finalized terminal state
+                self.stats.finalize_wall(self._t0)
                 self._error = self._error or e
                 # drain remaining submissions so a producer blocked on the
                 # bounded queue can't deadlock against a dead compressor
@@ -823,7 +939,8 @@ class AsyncCompressWriteEngine:
 
     def _commit_loop(self):
         while True:
-            item = self._wq.get()
+            with ot.span("engine.queue_wait", queue="commit"):
+                item = self._wq.get()
             if item is _SENTINEL:
                 return
             key, fut, user_meta = item
@@ -832,22 +949,30 @@ class AsyncCompressWriteEngine:
                 # after a failure only drain (the stream is doomed and
                 # will be aborted) — don't pay for further commits
                 if self._error is None:
-                    self.stats.serialize_s += ser_s
-                    self._commit(key, payload, meta, user_meta)
+                    self._commit(key, payload, meta, user_meta, ser_s)
             except BaseException as e:
+                self.stats.finalize_wall(self._t0)  # terminal: pipeline dead
                 self._error = self._error or e
                 # keep draining so the compressor never deadlocks on _wq
                 continue
 
-    def _commit(self, key, payload, meta, user_meta):
+    def _commit(self, key, payload, meta, user_meta, ser_s):
         merged = dict(meta or {})
         if user_meta:
             merged.update(user_meta)
-        rec = self._writer.append(key, payload, merged)
-        self.stats.n_records += 1
-        self.stats.stored_bytes += rec["nbytes"]
-        self.stats.raw_bytes += int(merged.get("raw_nbytes", 0))
+        self.stats.add("serialize_s", ser_s)
+        w0 = self._writer.write_s
+        with ot.span("engine.commit", key=key):
+            rec = self._writer.append(key, payload, merged)
+        self.stats.add("n_records", 1)
+        self.stats.add("stored_bytes", rec["nbytes"])
+        self.stats.add("raw_bytes", int(merged.get("raw_nbytes", 0)))
         self.stats.records.append(rec)
+        self._rec_rows.append({
+            "key": key, "nbytes": rec["nbytes"],
+            "raw_nbytes": int(merged.get("raw_nbytes", 0)),
+            "serialize_s": ser_s,
+            "write_s": self._writer.write_s - w0})
 
     # -- public API ----------------------------------------------------------
     def submit(self, key: str, item: Any, meta: Optional[Dict] = None):
@@ -865,15 +990,14 @@ class AsyncCompressWriteEngine:
         metas = list(metas) if metas is not None else [None] * len(keys)
         metas = [self._default_meta(it, m) for it, m in zip(items, metas)]
         if self._sync:
-            t0 = time.perf_counter()
             objs = self._compress(keys, items)
-            self.stats.compress_s += time.perf_counter() - t0
             for key, obj, m in zip(keys, objs, metas):
                 payload, meta, ser_s = self._serialize_one(obj)
-                self.stats.serialize_s += ser_s
-                self._commit(key, payload, meta, m)
+                self._commit(key, payload, meta, m, ser_s)
             return
-        self._cq.put((keys, items, metas))
+        with ot.span("engine.backpressure_stall", queue="compress"):
+            self._cq.put((keys, items, metas))
+        om.set_gauge(om.QUEUE_DEPTH, self._cq.qsize(), queue="compress")
 
     @staticmethod
     def _default_meta(item, meta: Optional[Dict]) -> Dict:
@@ -901,16 +1025,24 @@ class AsyncCompressWriteEngine:
             self._compressor.join()
             self._committer.join()
             self._pool.shutdown(wait=True)
+        # wall clock stops at the terminal state, success OR failure —
+        # set exactly once, never clobbered by a later path
+        self.stats.finalize_wall(self._t0)
         if self._error is not None:
             self._writer.abort()
             self._check_error()
-        self.stats.write_s = self._writer.write_s
+        self.stats.add("write_s", self._writer.write_s)
+        if self._telemetry:
+            self.manifest = _manifest.build_manifest(
+                stats=self.stats.as_dict(), config=self._config,
+                records=self._rec_rows, batches=self._batch_rows)
+            extra_meta = dict(extra_meta or {})
+            extra_meta.setdefault(_manifest.META_KEY, self.manifest)
         try:
             self._writer.close(extra_meta)
         except BaseException:       # footer/fsync failed: no orphan .tmp
             self._writer.abort()
             raise
-        self.stats.wall_s = time.perf_counter() - self._t0
         return self.stats
 
     def abort(self):
@@ -924,6 +1056,7 @@ class AsyncCompressWriteEngine:
             self._compressor.join()
             self._committer.join()
             self._pool.shutdown(wait=True)
+        self.stats.finalize_wall(self._t0)
         self._writer.abort()
 
     def __enter__(self):
@@ -954,7 +1087,7 @@ def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
                  writers: int = 2, max_inflight: int = 2, plan=None,
                  meta: Optional[Dict] = None,
                  emulate_bps: Optional[float] = None,
-                 fsync: bool = True) -> EngineStats:
+                 fsync: bool = True, telemetry: bool = True) -> EngineStats:
     """Compress `shards` into one stream file, overlapped (or sync).
 
     Shards are grouped `group` at a time: each group is one batched
@@ -962,6 +1095,9 @@ def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
     ordered commit of group i. Grouping never changes the bytes (each
     shard keeps its own adaptive-coder stream), only the overlap grain.
     """
+    if comp is None:
+        from ..core import CEAZ, CEAZConfig
+        comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
     eng = AsyncCompressWriteEngine(
         path, ceaz_compress_fn(comp, plan), writers=writers,
         max_inflight=max_inflight, meta=meta, sync=sync,
@@ -970,7 +1106,9 @@ def write_stream(path: str, shards: Sequence[np.ndarray], comp=None,
         codebook_bank=(comp.bank.to_meta()
                        if comp is not None
                        and getattr(comp, "bank", None) is not None
-                       else None))
+                       else None),
+        config=comp.cfg if comp is not None else None,
+        telemetry=telemetry)
     with eng:
         shards = [np.asarray(s) for s in shards]
         group = max(1, group)

@@ -1,0 +1,26 @@
+"""Unified telemetry layer for the CEAZ stack (docs/OBSERVABILITY.md).
+
+Three zero-dependency pieces, threaded through every layer of the
+pipeline so the paper's "where does the time go" questions — compute vs
+I/O overlap, per-stage device cost, achieved ratio vs target — are
+answerable from ONE vocabulary instead of five benchmark scripts:
+
+  * :mod:`repro.obs.trace`    — thread-safe span tracer with
+    Chrome/Perfetto ``trace_event`` JSON export (``CEAZ_TRACE=path`` or
+    ``CEAZConfig(trace=path)``);
+  * :mod:`repro.obs.metrics`  — process-wide counters / gauges /
+    histograms with snapshot-and-diff semantics and Prometheus-text +
+    JSON exporters;
+  * :mod:`repro.obs.manifest` — the per-stream telemetry manifest
+    embedded under the ``.ceazs`` footer ``telemetry`` meta key,
+    surfaced by ``StreamReader.telemetry()`` and the
+    ``python -m repro.obs.report`` CLI.
+
+Everything is off-or-cheap by default: with tracing disabled a span is
+one global check, and the counters are plain locked integer adds — the
+disabled-path overhead budget (<=1% on the fused encode benchmark) is
+asserted by ``tests/test_obs.py``.
+"""
+from . import manifest, metrics, trace
+
+__all__ = ["manifest", "metrics", "trace"]

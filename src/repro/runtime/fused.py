@@ -60,6 +60,8 @@ from ..core import dualquant as core_dq
 from ..core.codebook import AdaptiveCoder, BankCoder
 from ..core.huffman import DEFAULT_MAX_LEN, NUM_SYMBOLS, Codebook
 from ..kernels import dispatch
+from ..obs import metrics as om
+from ..obs import trace as ot
 
 # Device bitstreams are packed at the codebook's length limit; the wire
 # format (and the candidate window below) assumes codes never exceed 16
@@ -437,9 +439,10 @@ def _encode_rows(hists: np.ndarray, codes2, valid2, chunk_values: int,
     w32 = _w32_bucket(totals, chunk_values)
     cands = _cand_window(lengths_np[lengths_np > 0].min())
     encode_pack = dispatch.resolve("hufenc", kernel_impl)
-    words, block_nbits = encode_pack(
-        codes2, valid2, jnp.asarray(lengths_np), jnp.asarray(cwords_np),
-        block_size, w32, cands)
+    with dispatch.measure("hufenc", kernel_impl) as m:
+        words, block_nbits = m.done(encode_pack(
+            codes2, valid2, jnp.asarray(lengths_np),
+            jnp.asarray(cwords_np), block_size, w32, cands))
     return np.asarray(words), np.asarray(block_nbits), totals
 
 
@@ -515,7 +518,8 @@ def compress_error_bounded(x: np.ndarray, eb: float, mode: str,
         work = jnp.asarray(x.reshape(work_shape), jnp.float32)
         p1 = _run_pass1(work, eb, ndim, chunk_values, stats_on_device)
     decisions = _policy(p1.hists, coder, adaptive, exact_build)
-    enc = _encode_all(p1, decisions, block_size, kernel_impl)
+    with ot.span("fused.encode_pass2", n_chunks=p1.n_chunks):
+        enc = _encode_all(p1, decisions, block_size, kernel_impl)
     chunks = _assemble_chunks(p1, *enc, eb, decisions, block_size)
     lit_idx, lit_val = _literals(p1, x.reshape(-1), eb, ndim, work.shape)
     return CEAZCompressed(shape=x.shape, dtype=str(x.dtype), ndim=ndim,
@@ -674,11 +678,12 @@ def compress_error_bounded_bank(x: np.ndarray, eb: float, mode: str,
         kernel_impl, predictor, ndim, n_chunks, chunk_values, block_size,
         w32, cands, _k_outlier(chunk_values), min(n, max(256, n // 256)),
         stats_on_device)
-    (hists, sel, totals, words, block_nbits, oidx, odelta, ocount,
-     lit_idx, lit_q, lit_count, codes2, outl2, delta2, valid2, q,
-     centers) = run(
-        work, eb, jnp.asarray(bank.lengths, jnp.int32),
-        jnp.asarray(bank.code_table(), jnp.uint32))
+    with dispatch.measure("hufenc", kernel_impl) as _m:
+        (hists, sel, totals, words, block_nbits, oidx, odelta, ocount,
+         lit_idx, lit_q, lit_count, codes2, outl2, delta2, valid2, q,
+         centers) = _m.done(run(
+            work, eb, jnp.asarray(bank.lengths, jnp.int32),
+            jnp.asarray(bank.code_table(), jnp.uint32)))
     # --- everything below is host assembly from the one transfer ---
     hists_np = np.asarray(hists).astype(np.int64)
     sel_np = np.asarray(sel)
@@ -689,11 +694,13 @@ def compress_error_bounded_bank(x: np.ndarray, eb: float, mode: str,
         # same bank row the device argmin picked (integer-exact)
         assert d.bank_index == int(sel_np[i])
     if w32 < w32_full and not _bank_fits(totals_np, w32):
+        om.add(om.BANK_REPACKS)
         lengths_np, cwords_np = _codebook_tables(decisions)
-        words, block_nbits = _bank_repack_fn(
-            kernel_impl, block_size, w32_full, cands)(
-            codes2, valid2, jnp.asarray(lengths_np),
-            jnp.asarray(cwords_np))
+        with ot.span("fused.bank_overflow_repack"):
+            words, block_nbits = _bank_repack_fn(
+                kernel_impl, block_size, w32_full, cands)(
+                codes2, valid2, jnp.asarray(lengths_np),
+                jnp.asarray(cwords_np))
     centers_np = (np.asarray(centers).astype(np.int64)
                   if centers is not None else None)
     if stats_on_device:
@@ -867,19 +874,22 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
             ebs.append(ctrl.predict_next(ebs[-1]))
         seg2 = np.asarray(flat[pos * chunk_values:(pos + w) * chunk_values],
                           np.float32).reshape(w, chunk_values)
-        p1s, ocounts, codes_all, valid_all = _window_pass1(
-            seg2, ebs, stats_on_device)
+        with ot.span("fused.spec_window_pass1", window=w):
+            p1s, ocounts, codes_all, valid_all = _window_pass1(
+                seg2, ebs, stats_on_device)
         # replay the exact sequential feedback chain from the summaries;
         # a mispredicted chunk requantizes alone at its exact bound
         decisions, fed_bits, repaired = [], [], {}
         for j in range(w):
             if j > 0 and ebs[j] != float(ctrl.eb):
                 ebs[j] = float(ctrl.eb)
-                p1s[j] = _run_pass1(jnp.asarray(seg2[j]), ebs[j], 1,
-                                    chunk_values, stats_on_device)
-                # exact escape count from the (cached) outlier extraction
-                ocounts[j] = len(_outliers(p1s[j])[0][0])
-                repaired[j] = p1s[j].codes2
+                with ot.span("fused.spec_repair", chunk=pos + j):
+                    p1s[j] = _run_pass1(jnp.asarray(seg2[j]), ebs[j], 1,
+                                        chunk_values, stats_on_device)
+                    # exact escape count from the (cached) outlier
+                    # extraction
+                    ocounts[j] = len(_outliers(p1s[j])[0][0])
+                    repaired[j] = p1s[j].codes2
             d = _policy(p1s[j].hists, coder, adaptive, exact_build)[0]
             nblocks = max(1, -(-chunk_values // block_size))
             bits = _chunk_total_bits(p1s[j].hists[0], d, int(ocounts[j]),
@@ -887,6 +897,10 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
             ctrl.feedback(bits / chunk_values)
             decisions.append(d)
             fed_bits.append(bits)
+        # window head is exact by construction: w-1 chunks were
+        # speculated, the repaired ones mispredicted
+        om.add(om.SPEC_MISSES, len(repaired))
+        om.add(om.SPEC_HITS, (w - 1) - len(repaired))
         if repaired:        # one batched row replacement, not per miss
             codes_all = codes_all.at[jnp.asarray(list(repaired))].set(
                 jnp.concatenate(list(repaired.values())))

@@ -200,10 +200,12 @@ class _ChunkBatch:
         sym_flat = np.concatenate(tables_sym)
         len_flat = np.concatenate(tables_len)
         decode_blocks = dispatch.resolve("hufdec", self.kernel_impl)
-        return decode_blocks(jnp.asarray(words2), jnp.asarray(nbits2),
-                             jnp.asarray(counts), jnp.asarray(sym_flat),
-                             jnp.asarray(len_flat), jnp.asarray(cb_idx),
-                             self.block_size)
+        with dispatch.measure("hufdec", self.kernel_impl) as m:
+            return m.done(decode_blocks(
+                jnp.asarray(words2), jnp.asarray(nbits2),
+                jnp.asarray(counts), jnp.asarray(sym_flat),
+                jnp.asarray(len_flat), jnp.asarray(cb_idx),
+                self.block_size))
 
 
 def _padded_outliers(chunks) -> Tuple[np.ndarray, np.ndarray]:

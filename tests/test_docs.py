@@ -19,6 +19,7 @@ def test_readme_links_normative_docs():
     text = open(os.path.join(REPO, "README.md"), encoding="utf-8").read()
     assert "(docs/ARCHITECTURE.md)" in text
     assert "(docs/STREAM_FORMAT.md)" in text
+    assert "(docs/OBSERVABILITY.md)" in text
 
 
 def test_slugify_matches_github_style():
@@ -29,6 +30,13 @@ def test_slugify_matches_github_style():
 
 def test_codebook_bank_spec_doctests():
     path = os.path.join(REPO, "docs", "CODEBOOK_BANK.md")
+    results = doctest.testfile(path, module_relative=False)
+    assert results.attempted > 0
+    assert results.failed == 0
+
+
+def test_observability_doc_doctests():
+    path = os.path.join(REPO, "docs", "OBSERVABILITY.md")
     results = doctest.testfile(path, module_relative=False)
     assert results.attempted > 0
     assert results.failed == 0

@@ -171,3 +171,48 @@ def test_speculation_window_one_equals_off():
                    chunk_bytes=1 << 12, speculation=spec),
         offline_codebook=OFFLINE)
     assert_streams_bit_identical(mk("off").compress(x), mk(1).compress(x))
+
+
+# -- telemetry at the degenerate points --------------------------------------
+
+def test_empty_stream_produces_valid_all_zero_manifest(tmp_path):
+    """An engine closed with zero submissions must still embed a valid,
+    all-zero telemetry manifest — and the report renderer must handle it
+    without division by zero."""
+    from repro.io import engine as E
+    from repro.obs import manifest as M
+    from repro.obs import report
+
+    path = str(tmp_path / "empty.ceazs")
+    eng = E.AsyncCompressWriteEngine(
+        path, lambda keys, items: [np.asarray(i).tobytes() for i in items],
+        fsync=False)
+    eng.close()
+    assert eng.manifest["summary"] == {
+        "n_records": 0, "raw_bytes": 0, "stored_bytes": 0,
+        "ratio": 0.0, "overlap_efficiency": 0.0}
+    assert all(r["share"] == 0.0 for r in M.stage_rows(eng.manifest))
+    with E.StreamReader(path) as r:
+        assert len(r) == 0
+        assert r.telemetry() == eng.manifest
+    assert report.main([path]) == 0
+
+
+def test_zero_chunk_array_keeps_metrics_summary_finite():
+    """Compressing a zero-size array routes through the facade without
+    producing chunks; every derived ratio in the metrics summary must
+    stay finite (guarded division) on a registry that saw only that."""
+    from repro.obs import metrics as om
+
+    reg = om.MetricsRegistry()
+    s = reg.summary()
+    assert all(np.isfinite(v) for v in s.values())
+
+    _, fused = _pair(mode="rel", eb=1e-4)
+    before = om.snapshot()
+    c = fused.compress(np.zeros((0,), np.float32))
+    assert len(c.chunks) == 0
+    d = om.diff(om.snapshot(), before)
+    assert d.get(om.CHUNKS, 0) == 0
+    s = om.summary()
+    assert all(np.isfinite(v) for v in s.values())

@@ -30,9 +30,11 @@ def _write(path, shards, **kw):
 
 def test_async_byte_identical_to_sync(tmp_path, shards):
     """The whole point of ordered commit: overlap must not change a
-    single byte of the stream."""
-    _write(tmp_path / "async.ceazs", shards, sync=False)
-    _write(tmp_path / "sync.ceazs", shards, sync=True)
+    single byte of the stream. telemetry=False because the embedded
+    manifest carries wall-clock timings (docs/OBSERVABILITY.md) —
+    with it off the files must match bit for bit."""
+    _write(tmp_path / "async.ceazs", shards, sync=False, telemetry=False)
+    _write(tmp_path / "sync.ceazs", shards, sync=True, telemetry=False)
     a = (tmp_path / "async.ceazs").read_bytes()
     b = (tmp_path / "sync.ceazs").read_bytes()
     assert a == b
@@ -41,8 +43,8 @@ def test_async_byte_identical_to_sync(tmp_path, shards):
 def test_grouping_does_not_change_bytes(tmp_path, shards):
     """Each shard keeps its own adaptive-coder stream, so the overlap
     grain (group size) must be payload-invariant."""
-    _write(tmp_path / "g1.ceazs", shards, group=1)
-    _write(tmp_path / "g4.ceazs", shards, group=4)
+    _write(tmp_path / "g1.ceazs", shards, group=1, telemetry=False)
+    _write(tmp_path / "g4.ceazs", shards, group=4, telemetry=False)
     assert (tmp_path / "g1.ceazs").read_bytes() \
         == (tmp_path / "g4.ceazs").read_bytes()
 
@@ -493,3 +495,111 @@ def test_fuzz_truncation_at_every_section_boundary(tmp_path):
     back = E.read_stream_arrays(path)
     for a, b in zip(back, shards):
         assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+
+
+# -- telemetry satellites: wall_s terminal-state + footer forward-compat -----
+
+def test_write_engine_wall_s_set_once_on_error_path(tmp_path):
+    """Regression: wall_s is stamped exactly once, at the terminal state
+    — a failing close must still leave a final wall clock, and reading
+    stats repeatedly must not change it."""
+    path = str(tmp_path / "werr.ceazs")
+
+    def bad_compress(keys, items):
+        raise ValueError("compressor exploded")
+
+    eng = E.AsyncCompressWriteEngine(path, bad_compress, fsync=False)
+    eng.submit("a", np.zeros(8, np.float32))
+    with pytest.raises(RuntimeError, match="compressor exploded"):
+        for _ in range(64):
+            eng.submit("b", np.zeros(8, np.float32))
+        eng.close()
+    w = eng.stats.wall_s
+    assert w > 0
+    assert eng.stats.wall_s == w            # stable across reads
+    eng.abort()                             # later abort must not clobber
+    assert eng.stats.wall_s == w
+
+
+def test_write_engine_wall_s_idempotent_on_close(tmp_path):
+    path = str(tmp_path / "wok.ceazs")
+
+    def compress(keys, items):
+        return [np.asarray(i).tobytes() for i in items]
+
+    eng = E.AsyncCompressWriteEngine(path, compress, fsync=False)
+    eng.submit("a", np.zeros(8, np.float32))
+    st = eng.close()
+    w = st.wall_s
+    assert w > 0
+    eng.close()                             # second close: no re-stamp
+    assert eng.stats.wall_s == w
+
+
+def test_read_engine_wall_s_set_on_error_path(tmp_path, shards):
+    path = str(tmp_path / "rerr.ceazs")
+    _write(path, shards)
+    r = E.StreamReader(path)
+    off = r.records[1]["offset"] + E.RECORD_HEADER.size + 5
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    data[off] ^= 0xFF
+    open(path, "wb").write(bytes(data))
+    eng = E.AsyncDecodeReadEngine(path)
+    with pytest.raises(E.StreamCorruptionError):
+        eng.objects()
+    eng.close()
+    w = eng.stats.wall_s
+    assert w > 0
+    assert eng.stats.wall_s == w
+
+
+def _rewrite_footer(path, mutate):
+    """Rewrite the stream footer through `mutate(doc)` and restamp the
+    trailer (length + crc) so only the JSON content differs."""
+    import json
+    import zlib
+    r = E.StreamReader(path)
+    foot_off = r.records[-1]["offset"] + E.RECORD_HEADER.size \
+        + r.records[-1]["nbytes"]
+    r.close()
+    data = bytearray(open(path, "rb").read())
+    _, foot_len, _, _ = E.TRAILER.unpack(data[-E.TRAILER.size:])
+    doc = json.loads(bytes(data[foot_off:foot_off + foot_len]))
+    mutate(doc)
+    footer = json.dumps(doc, sort_keys=True, separators=(",", ":")).encode()
+    data = data[:foot_off] + footer + E.TRAILER.pack(
+        foot_off, len(footer), zlib.crc32(footer) & 0xFFFFFFFF, E.END_MAGIC)
+    open(path, "wb").write(bytes(data))
+
+
+def test_footer_unknown_meta_keys_are_ignored(tmp_path, shards):
+    """Forward compat: a reader from this version must open streams whose
+    footer meta carries keys it has never heard of — a future telemetry
+    schema, brand-new meta entries, even unknown top-level doc keys. The
+    `telemetry` key is advisory, never load-bearing
+    (docs/STREAM_FORMAT.md)."""
+    path = str(tmp_path / "future.ceazs")
+    _write(path, shards)
+    want = E.read_stream_arrays(path)
+
+    future_manifest = {"schema": 999, "hyperdrive": {"warp": [9, 9, 9]},
+                       "stages": "reshaped-beyond-recognition"}
+
+    def mutate(doc):
+        doc["meta"]["telemetry"] = future_manifest
+        doc["meta"]["from_the_future"] = {"nested": ["junk", 42]}
+        doc["not_a_known_top_level_key"] = True
+
+    _rewrite_footer(path, mutate)
+    r = E.StreamReader(path)                 # must NOT raise
+    try:
+        # unknown meta is preserved verbatim, telemetry() hands it back
+        # as-is without interpreting it
+        assert r.meta["from_the_future"] == {"nested": ["junk", 42]}
+        assert r.telemetry() == future_manifest
+    finally:
+        r.close()
+    got = E.read_stream_arrays(path)         # payloads fully readable
+    for a, b in zip(got, want):
+        assert np.array_equal(a, b)

@@ -1,0 +1,442 @@
+"""Unified telemetry layer (src/repro/obs/): span tracer, pipeline
+counters, stream-embedded manifests, the report CLI, kernel-dispatch
+accounting — plus the acceptance gates: a traced run yields a
+Chrome-loadable JSON with OVERLAPPED compress/commit spans from the
+async engines, the embedded manifest round-trips bit-exactly through
+the footer, and the disabled-instrumentation overhead on the fused
+encode path stays within budget (slow-marked)."""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import CEAZ, CEAZConfig
+from repro.io import engine as E
+from repro.kernels import dispatch
+from repro.obs import manifest as M
+from repro.obs import metrics as om
+from repro.obs import report
+from repro.obs import trace as ot
+
+
+@pytest.fixture()
+def tracer():
+    """A fresh process tracer for the test, uninstalled afterwards."""
+    ot.disable()
+    t = ot.enable(save_at_exit=False)
+    t.clear()
+    yield t
+    ot.disable()
+
+
+# -- trace.py ----------------------------------------------------------------
+
+def test_span_disabled_is_shared_noop():
+    ot.disable()
+    s = ot.span("anything", x=1)
+    assert s is ot.span("other")           # ONE shared object, no alloc
+    with s:
+        s.set(ignored=True)
+    assert ot.active() is None and ot.save() is None
+
+
+def test_spans_record_nesting_and_args(tracer):
+    with ot.span("outer", depth=0):
+        with ot.span("inner") as s:
+            s.set(depth=1)
+    evs = tracer.events()
+    names = [e["name"] for e in evs]
+    assert names == ["inner", "outer"]     # inner exits (records) first
+    inner, outer = evs
+    assert inner["args"] == {"depth": 1}
+    assert inner["ph"] == outer["ph"] == "X"
+    # nesting falls out of the timestamps: inner inside outer
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+
+
+def test_traced_decorator(tracer):
+    @ot.traced("my.op")
+    def f(a, b):
+        return a + b
+
+    assert f(2, 3) == 5
+    assert [e["name"] for e in tracer.events()] == ["my.op"]
+    ot.disable()
+    assert f(2, 3) == 5                    # disabled path still calls through
+
+
+def test_chrome_export_shape_and_thread_names(tracer, tmp_path):
+    def work():
+        with ot.span("threaded"):
+            pass
+
+    th = threading.Thread(target=work, name="my-worker")
+    th.start()
+    th.join()
+    with ot.span("main_span"):
+        pass
+    doc = tracer.to_chrome()
+    assert doc["displayTimeUnit"] == "ms"
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    xs = [e for e in evs if e["ph"] == "X"]
+    assert {e["name"] for e in xs} == {"threaded", "main_span"}
+    assert any(e["name"] == "process_name" for e in meta)
+    tnames = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert "my-worker" in tnames
+    # save() writes the same document as loadable JSON
+    p = tracer.save(str(tmp_path / "t.trace.json"))
+    assert json.load(open(p)) == json.loads(json.dumps(doc))
+
+
+def test_enable_is_idempotent(tracer):
+    assert ot.enable(save_at_exit=False) is tracer
+    ot.enable(str("later.json"), save_at_exit=False)
+    assert tracer.path == "later.json"     # path upgraded, same tracer
+
+
+# -- metrics.py --------------------------------------------------------------
+
+def test_counter_gauge_histogram_basics():
+    reg = om.MetricsRegistry()
+    reg.counter("c_total").add(2)
+    reg.counter("c_total").inc()
+    reg.gauge("g").set(7)
+    reg.gauge("g").add(-3)
+    reg.histogram("h").observe(1.0)
+    reg.histogram("h").observe(3.0)
+    s = reg.snapshot()
+    assert s["c_total"] == 3 and s["g"] == 4
+    assert s["h"] == {"count": 2, "sum": 4.0, "min": 1.0, "max": 3.0}
+
+
+def test_labels_key_distinct_metrics_and_prometheus_text():
+    reg = om.MetricsRegistry()
+    reg.counter("calls_total", op="hufenc", impl="jnp").add(5)
+    reg.counter("calls_total", impl="pallas", op="hufenc").add(1)
+    reg.histogram("lat_seconds", op="hufenc").observe(0.5)
+    s = reg.snapshot()
+    assert s['calls_total{impl="jnp",op="hufenc"}'] == 5
+    assert s['calls_total{impl="pallas",op="hufenc"}'] == 1
+    text = reg.to_prometheus()
+    assert "# TYPE calls_total counter" in text
+    assert 'calls_total{impl="jnp",op="hufenc"} 5' in text
+    assert "# TYPE lat_seconds histogram" in text
+    assert 'lat_seconds_count{op="hufenc"} 1' in text
+    assert 'lat_seconds_sum{op="hufenc"} 0.5' in text
+    json.loads(reg.to_json())              # JSON exporter stays parseable
+
+
+def test_kind_mismatch_fails_loudly():
+    reg = om.MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError, match="registered as counter"):
+        reg.gauge("x")
+
+
+def test_snapshot_diff_scopes_a_run():
+    reg = om.MetricsRegistry()
+    reg.counter("a_total").add(10)
+    reg.histogram("h").observe(1.0)
+    before = reg.snapshot()
+    reg.counter("a_total").add(5)
+    reg.counter("b_total").add(1)
+    reg.histogram("h").observe(2.0)
+    d = om.diff(reg.snapshot(), before)
+    assert d["a_total"] == 5 and d["b_total"] == 1
+    assert d["h"]["count"] == 1 and d["h"]["sum"] == 2.0
+
+
+def test_summary_guarded_division_all_zero():
+    reg = om.MetricsRegistry()
+    s = reg.summary()                      # empty registry: no metrics
+    assert s["achieved_ratio"] == 0.0
+    assert s["speculation_hit_rate"] == 0.0
+    assert all(v == 0.0 for v in s.values())
+
+
+def test_default_registry_helpers_feed_summary():
+    before = om.snapshot()
+    om.add(om.RAW_BYTES, 4000)
+    om.add(om.STORED_BYTES, 1000)
+    om.add(om.SPEC_HITS, 3)
+    om.add(om.SPEC_MISSES, 1)
+    d = om.diff(om.snapshot(), before)
+    assert d[om.RAW_BYTES] == 4000 and d[om.SPEC_HITS] == 3
+    s = om.summary()
+    assert s["achieved_ratio"] > 0 and 0 < s["speculation_hit_rate"] <= 1
+
+
+# -- manifest.py -------------------------------------------------------------
+
+def test_config_fingerprint_stable_and_field_sensitive():
+    a = CEAZConfig(mode="rel", eb=1e-4)
+    b = CEAZConfig(mode="rel", eb=1e-4)
+    c = CEAZConfig(mode="rel", eb=1e-3)
+    assert M.config_fingerprint(a) == M.config_fingerprint(b)
+    assert M.config_fingerprint(a) != M.config_fingerprint(c)
+    assert len(M.config_fingerprint(a)) == 12
+    assert M.config_fingerprint({"k": 1}) != M.config_fingerprint({"k": 2})
+
+
+def test_build_manifest_zero_stats_is_all_zero():
+    man = M.build_manifest(stats={})
+    assert man["schema"] == M.MANIFEST_SCHEMA
+    assert man["summary"] == {"n_records": 0, "raw_bytes": 0,
+                              "stored_bytes": 0, "ratio": 0.0,
+                              "overlap_efficiency": 0.0}
+    rows = M.stage_rows(man)
+    assert [r["stage"] for r in rows] == ["compress", "serialize", "write"]
+    assert all(r["seconds"] == 0.0 and r["share"] == 0.0 for r in rows)
+
+
+def test_from_meta_is_lenient():
+    assert M.from_meta(None) is None
+    assert M.from_meta({}) is None
+    assert M.from_meta({"telemetry": "not-a-dict"}) is None
+    future = {"schema": 99, "surprise": [1, 2]}
+    assert M.from_meta({"telemetry": future}) == future
+
+
+# -- kernel dispatch accounting ---------------------------------------------
+
+def test_measure_counts_per_op_impl():
+    key = om.KERNEL_CALLS + '{impl="jnp",op="hufenc"}'
+    before = om.snapshot().get(key, 0)
+    with dispatch.measure("hufenc", "jnp") as m:
+        m.done(np.zeros(3))
+    with dispatch.measure("hufenc", "jnp"):
+        pass
+    assert om.snapshot()[key] == before + 2
+
+
+def test_measure_auto_resolves_concrete_impl():
+    impl = dispatch.resolve_name("hufdec", "auto")
+    assert impl in ("jnp", "pallas")
+    key = om.KERNEL_CALLS + f'{{impl="{impl}",op="hufdec"}}'
+    before = om.snapshot().get(key, 0)
+    with dispatch.measure("hufdec", "auto"):
+        pass
+    assert om.snapshot()[key] == before + 1
+
+
+def test_opt_in_timing_records_histogram():
+    hkey = om.KERNEL_SECONDS + '{impl="jnp",op="hufenc"}'
+    before = om.snapshot().get(hkey, {"count": 0})["count"] \
+        if isinstance(om.snapshot().get(hkey), dict) else 0
+    assert not dispatch.timing_enabled()   # default hot path is sync-free
+    dispatch.set_timing(True)
+    try:
+        import jax.numpy as jnp
+        with dispatch.measure("hufenc", "jnp") as m:
+            m.done(jnp.arange(8))
+    finally:
+        dispatch.set_timing(False)
+    after = om.snapshot()[hkey]
+    assert after["count"] == before + 1 and after["sum"] >= 0
+
+
+# -- engines: traced overlap + embedded manifest round-trip ------------------
+
+def _stub_compress(keys, items):
+    time.sleep(0.003)                      # stand-in device pass
+    return [np.asarray(i).tobytes() for i in items]
+
+
+def _write_throttled(path, n=8, telemetry=True):
+    """8 x 100KB records against an emulated ~2MB/s store: commit of
+    group i provably overlaps compress of group i+1."""
+    eng = E.AsyncCompressWriteEngine(
+        str(path), _stub_compress, fsync=False, emulate_bps=2e6,
+        config={"kind": "stub"}, telemetry=telemetry)
+    with eng:
+        for i in range(n):
+            eng.submit(f"k{i}", np.full(25_000, i, np.float32))
+    return eng
+
+
+def _intervals(evs, name):
+    return [(e["ts"], e["ts"] + e["dur"], e["tid"])
+            for e in evs if e["name"] == name]
+
+
+def test_traced_write_engine_shows_overlap(tracer, tmp_path):
+    _write_throttled(tmp_path / "o.ceazs")
+    evs = tracer.events()
+    compress = _intervals(evs, "engine.compress")
+    commit = _intervals(evs, "engine.commit")
+    assert compress and commit
+    overlapped = [
+        (c, w) for c in compress for w in commit
+        if c[2] != w[2] and max(c[0], w[0]) < min(c[1], w[1])]
+    assert overlapped, "no compress span overlapped any commit span"
+    # and the whole thing exports as Chrome-loadable JSON
+    doc = json.loads(json.dumps(tracer.to_chrome()))
+    assert any(e["name"] == "engine.commit" for e in doc["traceEvents"])
+
+
+def test_traced_read_engine_spans(tracer, tmp_path):
+    path = tmp_path / "r.ceazs"
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+    rng = np.random.default_rng(3)
+    E.write_stream(str(path), [rng.normal(size=(64, 64)).astype(np.float32)
+                               for _ in range(4)], comp, fsync=False)
+    tracer.clear()
+    with E.AsyncDecodeReadEngine(str(path)) as eng:
+        out = eng.objects()
+    assert len(out) == 4
+    names = {e["name"] for e in tracer.events()}
+    assert "reader.prefetch" in names
+    assert "reader.decode_group" in names
+    assert "reader.queue_wait" in names
+
+
+def test_manifest_round_trips_bit_exact(tmp_path):
+    eng = _write_throttled(tmp_path / "m.ceazs", n=4)
+    assert eng.manifest is not None
+    with E.StreamReader(str(tmp_path / "m.ceazs")) as r:
+        embedded = r.telemetry()
+    # bit-exact: the embedded dict equals the engine's manifest including
+    # every float (json repr round-trip is exact for IEEE doubles)
+    assert embedded == eng.manifest
+    assert embedded["fingerprint"] == M.config_fingerprint({"kind": "stub"})
+    assert embedded["summary"]["n_records"] == 4
+    assert len(embedded["records"]) == 4
+    assert all(r["write_s"] > 0 for r in embedded["records"])
+    assert embedded["stages"]["wall_s"] > 0
+
+
+def test_telemetry_off_leaves_footer_clean(tmp_path):
+    eng = _write_throttled(tmp_path / "q.ceazs", n=2, telemetry=False)
+    assert eng.manifest is None
+    with E.StreamReader(str(tmp_path / "q.ceazs")) as r:
+        assert r.telemetry() is None
+        assert M.META_KEY not in r.meta
+
+
+def test_queue_depth_gauges_and_corruption_counter(tmp_path):
+    _write_throttled(tmp_path / "g.ceazs", n=2)
+    snap = om.snapshot()
+    assert om.QUEUE_DEPTH + '{queue="compress"}' in snap
+    before = snap.get(om.CORRUPTION, 0)
+    with pytest.raises(E.StreamCorruptionError):
+        E.StreamReader(str(tmp_path / "nonexistent.ceazs"))
+    assert om.snapshot()[om.CORRUPTION] == before + 1
+
+
+# -- report CLI --------------------------------------------------------------
+
+def test_report_cli_prints_stage_rows(tmp_path, capsys):
+    path = tmp_path / "c.ceazs"
+    _write_throttled(path, n=3)
+    assert report.main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "stage" in out and "share" in out
+    for stage in ("compress", "serialize", "write", "wall"):
+        assert stage in out
+    assert "slowest records" in out
+    # --json dumps the raw manifest
+    assert report.main([str(path), "--json"]) == 0
+    man = json.loads(capsys.readouterr().out)
+    assert man["schema"] == M.MANIFEST_SCHEMA
+
+
+def test_report_cli_exit_codes(tmp_path, capsys):
+    assert report.main([]) == 2                       # usage
+    assert report.main(["x", "--records"]) == 2       # bad --records
+    no_tel = tmp_path / "n.ceazs"
+    _write_throttled(no_tel, n=1, telemetry=False)
+    assert report.main([str(no_tel)]) == 3            # valid, no manifest
+    bad = tmp_path / "bad.ceazs"
+    bad.write_bytes(b"not a stream at all")
+    assert report.main([str(bad)]) == 1               # corrupt
+    capsys.readouterr()
+
+
+# -- speculation / facade counters -------------------------------------------
+
+def test_speculation_counters_account_windows():
+    before = om.snapshot()
+    comp = CEAZ(CEAZConfig(mode="fixed_ratio", target_ratio=8.0,
+                           use_fused=True, chunk_bytes=8192 * 4,
+                           block_size=4096, speculation="auto"))
+    rng = np.random.default_rng(7)
+    x = np.cumsum(rng.standard_normal(16 * 8192)).astype(np.float32)
+    c = comp.compress(x)
+    d = om.diff(om.snapshot(), before)
+    hits = d.get(om.SPEC_HITS, 0)
+    misses = d.get(om.SPEC_MISSES, 0)
+    assert hits + misses > 0               # windows actually speculated
+    assert d.get(om.CHUNKS, 0) == len(c.chunks)
+    assert d.get(om.RAW_BYTES, 0) == x.nbytes
+    assert d.get(om.STORED_BYTES, 0) == c.nbytes()
+
+
+def test_decode_counters(tmp_path):
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(128, 128)).astype(np.float32)
+    c = comp.compress(x)
+    before = om.snapshot()
+    rec = comp.decompress(c)
+    d = om.diff(om.snapshot(), before)
+    assert d.get(om.DECODED_CHUNKS, 0) == len(c.chunks)
+    assert d.get(om.DECODED_BYTES, 0) == rec.nbytes
+
+
+# -- disabled-path overhead budget (slow) ------------------------------------
+
+@pytest.mark.slow
+def test_disabled_instrumentation_overhead_budget():
+    """Acceptance bar: with tracing disabled (the default), the fused
+    encode path must run within 1% of a build whose telemetry helpers
+    are no-ops — the instrumentation call sites themselves are the only
+    difference, so this measures exactly their cost."""
+    ot.disable()
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           chunk_bytes=1 << 20))
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(512, 512)).astype(np.float32)
+    comp.compress(x)                       # warm jit caches
+    comp.compress(x)
+
+    def once():
+        t0 = time.perf_counter()
+        comp.compress(x)
+        return time.perf_counter() - t0
+
+    import repro.obs.metrics as metrics_mod
+    import repro.obs.trace as trace_mod
+    saved = (trace_mod.span, metrics_mod.add, metrics_mod.set_gauge,
+             metrics_mod.observe)
+    noop_span = trace_mod._NOOP
+
+    def patch_off():
+        trace_mod.span = lambda name, **a: noop_span
+        metrics_mod.add = lambda *a, **k: None
+        metrics_mod.set_gauge = lambda *a, **k: None
+        metrics_mod.observe = lambda *a, **k: None
+
+    # interleave the two variants round-robin: clock-frequency drift
+    # between two back-to-back batches would otherwise dwarf the
+    # sub-percent effect being measured
+    inst, noop = [], []
+    try:
+        for _ in range(9):
+            (trace_mod.span, metrics_mod.add, metrics_mod.set_gauge,
+             metrics_mod.observe) = saved
+            inst.append(once())
+            patch_off()
+            noop.append(once())
+    finally:
+        (trace_mod.span, metrics_mod.add, metrics_mod.set_gauge,
+         metrics_mod.observe) = saved
+    t_instrumented, t_noop = min(inst), min(noop)
+    # ≤1% relative, with a 200µs absolute floor so sub-ms jitter on a
+    # noisy runner can't produce a spurious failure on a fast machine
+    assert t_instrumented <= t_noop * 1.01 + 2e-4, (
+        f"instrumented {t_instrumented * 1e3:.2f}ms vs no-op "
+        f"{t_noop * 1e3:.2f}ms")

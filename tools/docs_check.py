@@ -24,7 +24,8 @@ from typing import Dict, List, Set
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
 FENCE_RE = re.compile(r"^(```|~~~)")
-REQUIRED_README_LINKS = ("docs/ARCHITECTURE.md", "docs/STREAM_FORMAT.md")
+REQUIRED_README_LINKS = ("docs/ARCHITECTURE.md", "docs/STREAM_FORMAT.md",
+                         "docs/OBSERVABILITY.md")
 
 
 def slugify(heading: str) -> str:
