@@ -1,21 +1,31 @@
 """Inner-loop kernel microbenchmark: jnp vs Pallas through the dispatch
-layer, with a bit-identity gate.
+layer, with a bit-identity gate and an opt-in timing gate.
 
-Times the two dispatchable hot loops of the fused pipeline — the encode
-gather-pack (`hufenc`) and the canonical-table decode walk (`hufdec`) —
-for every registered implementation, on synthetic chunk batches shaped
-like what ``runtime/fused.py`` / ``runtime/fused_decode.py`` actually
-stage. Emits one JSON row per (op, impl, case) into the BENCH artifact
-trajectory (results/bench/kernel_microbench.json).
+Times the dispatchable hot loops of the fused pipeline — the encode
+gather-pack (`hufenc`), the canonical-table decode walk (`hufdec`) and
+the bank-mode encode megakernel (`ceaz_chunk`, timed against a
+stage-boundary baseline) — for every registered implementation, on
+synthetic chunk batches shaped like what ``runtime/fused.py`` /
+``runtime/fused_decode.py`` actually stage. Emits one JSON row per
+(op, impl, case) into the BENCH artifact trajectory
+(results/bench/kernel_microbench.json).
 
-Gate policy: off-TPU the Pallas kernels run under ``interpret=True``,
-which is a CORRECTNESS vehicle, not a performance one — so the CI gate
-asserts bit-identity between every implementation pair and does NOT
-compare their speed. On a real TPU backend (where 'pallas' compiles) the
-JSON rows carry the real relative numbers for the perf trajectory.
+Gate policy: bit-identity between every implementation pair is ALWAYS
+asserted. Timing is gated only under ``CEAZ_TIMING_GATE=1`` (the
+nightly lane sets it):
+
+  * every backend — the one-call `ceaz_chunk` op must not be slower
+    than the same pipeline with a host sync at every stage boundary
+    (quantize | histogram | select | pack), within a noise margin;
+  * non-CPU backends only (the env-guarded ``hardware-gates`` job) —
+    the compiled 'pallas' megakernel must additionally beat the 'jnp'
+    trace. Off-TPU, 'pallas' runs under ``interpret=True``, which is a
+    correctness vehicle, not a performance one, so that comparison is
+    never enforced on CPU.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -35,6 +45,13 @@ CASES = [
     (16, 16384),
     (4, 65536),
 ]
+# timing-gate noise margin: "not slower" means >= GATE_MARGIN x the
+# baseline's median throughput (shared CI runners jitter ~10%)
+GATE_MARGIN = 0.85
+
+
+def timing_gate_enabled() -> bool:
+    return os.environ.get("CEAZ_TIMING_GATE", "") not in ("", "0")
 
 
 def _chunk_batch(rng, n_chunks: int, cv: int):
@@ -83,6 +100,70 @@ def _time(fn, *args, repeats: int = 3, **kw) -> tuple:
     return out, best
 
 
+# -- ceaz_chunk: megakernel vs stage-boundary baseline ------------------------
+# The baseline is the SAME pipeline cut at its historical stage
+# boundaries — quantize | histogram | bank-select | pack as four
+# separate dispatches with a host sync after each — i.e. exactly the
+# per-stage round-trips the megakernel op deletes. Outputs are
+# bit-identical to the op by construction (same stage code).
+
+def _bank_tables(n_books: int = 4):
+    from repro.core import train_codebook_bank
+    r = np.random.default_rng(7)
+    fields = [np.cumsum(r.standard_normal(40000)).astype(np.float32) / 10,
+              np.cumsum(r.standard_normal(40000)).astype(np.float32) / 50]
+    bank = train_codebook_bank(fields, n_books=n_books)
+    return (bank.lengths.astype(np.int32),
+            bank.code_table().astype(np.uint32))
+
+
+def _mega_batch(rng, n_chunks: int, cv: int):
+    """Chained 1-D smooth-walk chunk rows + halos (the runtime's bank
+    staging: row i's halo is row i-1's last raw value)."""
+    flat = np.cumsum(rng.standard_normal(n_chunks * cv)) \
+        .astype(np.float32) / 10
+    work2 = flat.reshape(n_chunks, cv)
+    prev2 = np.concatenate([[0.0], work2[:-1, -1]]) \
+        .astype(np.float32).reshape(n_chunks, 1)
+    valid2 = np.ones((n_chunks, cv), bool)
+    ebs = np.full((n_chunks,), 1e-3, np.float32)
+    return work2, prev2, valid2, ebs
+
+
+@jax.jit
+def _stage_quantize(work2, prev2, valid2, ebs):
+    from repro.kernels.megakernel import ref as MR
+    return MR._quantize_rows(work2, prev2, valid2, ebs, "lorenzo")[1]
+
+
+@jax.jit
+def _stage_hist(codes2, valid2):
+    C = codes2.shape[0]
+    cidx = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None],
+                            codes2.shape)
+    return jnp.zeros((C, H.NUM_SYMBOLS), jnp.int32) \
+        .at[cidx, codes2].add(valid2.astype(jnp.int32))
+
+
+@jax.jit
+def _stage_select(hists, bank_lengths):
+    from repro.kernels.megakernel import ref as MR
+    return MR.select_bank(hists, bank_lengths)
+
+
+def _staged_ceaz(work2, prev2, valid2, ebs, bl, bc, w32):
+    encode_pack = dispatch.resolve("hufenc", "jnp")
+    codes2 = _stage_quantize(work2, prev2, valid2, ebs)
+    jax.block_until_ready(codes2)
+    hists = _stage_hist(codes2, valid2)
+    jax.block_until_ready(hists)
+    sel, totals = _stage_select(hists, bl)
+    jax.block_until_ready((sel, totals))
+    words, nbits = encode_pack(codes2, valid2, bl[sel], bc[sel],
+                               BLOCK_SIZE, w32, 33)
+    return hists, sel, totals, words, nbits
+
+
 def run():
     rng = np.random.default_rng(0)
     backend = jax.default_backend()
@@ -123,19 +204,77 @@ def run():
             if not np.array_equal(out, dec_out["jnp"]):
                 mismatches.append(("hufdec", impl, case))
 
+    # -- ceaz_chunk megakernel vs the stage-boundary baseline ---------
+    bl_np, bc_np = _bank_tables()
+    bl, bc = jnp.asarray(bl_np), jnp.asarray(bc_np)
+    for n_chunks, cv in CASES:
+        work2, prev2, valid2, ebs = _mega_batch(rng, n_chunks, cv)
+        case = f"{n_chunks}x{cv}"
+        mb = work2.size * 4 / 1e6
+        margs = (jnp.asarray(work2), jnp.asarray(prev2),
+                 jnp.asarray(valid2), jnp.asarray(ebs), bl, bc)
+        # provision the pack for the exact payload (one probe run)
+        ref_out = dispatch.resolve("ceaz_chunk", "jnp")(
+            *margs, BLOCK_SIZE, 64, 33, "lorenzo")
+        need = 2 * ((int(np.asarray(ref_out[7]).max()) + 63) // 64 + 1)
+        w32 = -(-need // 128) * 128
+        mega_out = {}
+        for impl in dispatch.available("ceaz_chunk"):
+            fn = dispatch.resolve("ceaz_chunk", impl)
+            out, t = _time(fn, *margs, BLOCK_SIZE, w32, 33, "lorenzo")
+            mega_out[impl] = tuple(np.asarray(a) for a in out[5:])
+            rows.append(dict(op="ceaz_chunk", impl=impl, case=case,
+                             backend=backend, mb=mb, seconds=t,
+                             throughput_mbs=mb / t))
+        out, t = _time(_staged_ceaz, *margs, w32)
+        mega_out["staged"] = tuple(np.asarray(a) for a in out)
+        rows.append(dict(op="ceaz_chunk", impl="staged", case=case,
+                         backend=backend, mb=mb, seconds=t,
+                         throughput_mbs=mb / t))
+        for impl, out in mega_out.items():
+            for a, b in zip(out, mega_out["jnp"]):
+                if not np.array_equal(a, b):
+                    mismatches.append(("ceaz_chunk", impl, case))
+                    break
+
     by = {}
     for r in rows:
         by.setdefault((r["op"], r["impl"]), []).append(r["throughput_mbs"])
     summary = {f"{op}_{impl}_mbs": float(np.median(v))
                for (op, impl), v in by.items()}
+    # timing gates (CEAZ_TIMING_GATE=1): the one-call op vs the
+    # stage-boundary baseline everywhere; compiled pallas vs jnp only
+    # off-CPU (interpret mode is a correctness vehicle, never timed)
+    gate_failures = []
+    if timing_gate_enabled():
+        auto = dispatch.auto_impl("ceaz_chunk")
+        if summary[f"ceaz_chunk_{auto}_mbs"] < \
+                GATE_MARGIN * summary["ceaz_chunk_staged_mbs"]:
+            gate_failures.append(
+                ("ceaz_chunk", auto, "slower than stage-boundary "
+                 "baseline", summary[f"ceaz_chunk_{auto}_mbs"],
+                 summary["ceaz_chunk_staged_mbs"]))
+        if backend != "cpu":
+            for op in ("hufenc", "ceaz_chunk"):
+                if summary.get(f"{op}_pallas_mbs", 0.0) < \
+                        GATE_MARGIN * summary[f"{op}_jnp_mbs"]:
+                    gate_failures.append(
+                        (op, "pallas", "slower than jnp on " + backend,
+                         summary.get(f"{op}_pallas_mbs", 0.0),
+                         summary[f"{op}_jnp_mbs"]))
     rows.append(dict(kind="summary", backend=backend,
                      auto_hufenc=dispatch.auto_impl("hufenc"),
                      auto_hufdec=dispatch.auto_impl("hufdec"),
-                     bit_identical=not mismatches, **summary))
+                     auto_ceaz_chunk=dispatch.auto_impl("ceaz_chunk"),
+                     bit_identical=not mismatches,
+                     timing_gate_enforced=timing_gate_enabled(),
+                     timing_gate_pass=not gate_failures, **summary))
     emit("kernel_microbench", rows,
          derived=";".join(f"{k}={v:.0f}" for k, v in summary.items())
-         + f";bit_identical={not mismatches}")
+         + f";bit_identical={not mismatches}"
+         + f";timing_gate={'skip' if not timing_gate_enabled() else ('pass' if not gate_failures else 'FAIL')}")
     assert not mismatches, f"kernel impl mismatches: {mismatches}"
+    assert not gate_failures, f"kernel timing gate: {gate_failures}"
     return rows
 
 

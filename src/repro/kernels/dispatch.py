@@ -33,7 +33,20 @@ Op calling conventions (all array args jax-compatible):
   hufdec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
          block_size) -> codes (C, NB*block_size) u16
   dq_center(q2, valid2) -> centers (C,) i32   (value-direct per-chunk
-         centre reduction: count-aware median of each row's valid set)
+         centre reduction: count-aware median of each row's valid set;
+         'pallas' is the radix-select VMEM kernel, 'jnp' the sort)
+  ceaz_chunk(work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
+         block_size, w32, cands, predictor)
+      -> (q2, codes2, outl2, delta2, centers, hists, sel, totals,
+          words, block_nbits)
+         The bank-mode encode megakernel: dual-quantize (Lorenzo from a
+         1-value raw halo, or value-direct centring), 1024-bin
+         histogram, exact-integer bank selection (argmin hist .
+         lengths_k) and prefix-sum gather-pack as ONE program per chunk
+         ('pallas'; word-tiled past the per-program VMEM limit), or the
+         jnp twin composed from the stage ops ('jnp'). valid2 rows must
+         be prefix masks. See kernels/megakernel/ref.py for the full
+         contract.
 """
 from __future__ import annotations
 
@@ -210,6 +223,21 @@ def _dq_center_jnp() -> Callable:
     return ops.chunk_center
 
 
+def _dq_center_pallas() -> Callable:
+    from .dualquant import ops
+    return ops.dq_center
+
+
+def _ceaz_chunk_jnp() -> Callable:
+    from .megakernel import ref
+    return ref.ceaz_chunk
+
+
+def _ceaz_chunk_pallas() -> Callable:
+    from .megakernel import ops
+    return ops.ceaz_chunk
+
+
 # auto policy: on CPU and GPU the XLA-compiled jnp path wins (a Pallas
 # kernel would run interpreted there); on TPU the explicit VMEM-resident
 # kernels are the point. GPU-specialized variants (Mosaic-GPU / Triton)
@@ -218,9 +246,7 @@ register("hufenc", "jnp", _hufenc_jnp, auto_for=("cpu", "gpu"))
 register("hufenc", "pallas", _hufenc_pallas, auto_for=("tpu",))
 register("hufdec", "jnp", _hufdec_jnp, auto_for=("cpu", "gpu"))
 register("hufdec", "pallas", _hufdec_pallas, auto_for=("tpu",))
-# dq_center is a sort-based reduction XLA already compiles well on every
-# backend, so 'pallas' aliases the jnp impl — the registration keeps
-# kernel_impl='pallas' pipelines resolving, and a dedicated TPU kernel
-# can replace the alias without touching any caller.
 register("dq_center", "jnp", _dq_center_jnp, auto_for=("cpu", "gpu"))
-register("dq_center", "pallas", _dq_center_jnp, auto_for=("tpu",))
+register("dq_center", "pallas", _dq_center_pallas, auto_for=("tpu",))
+register("ceaz_chunk", "jnp", _ceaz_chunk_jnp, auto_for=("cpu", "gpu"))
+register("ceaz_chunk", "pallas", _ceaz_chunk_pallas, auto_for=("tpu",))

@@ -24,6 +24,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 RADIUS = 512
@@ -152,3 +153,83 @@ def dq2d(x: jax.Array, eb: jax.Array, *, interpret: bool = True):
         interpret=interpret,
     )
     return tuple(kernel(eb_arr, x, x, x, x))
+
+
+# ---------------------------------------------------------------------------
+# dq_center: count-aware VMEM median (value-direct per-chunk centre)
+# ---------------------------------------------------------------------------
+#
+# The jnp reference (`ops.chunk_center`) sorts each row and indexes the
+# two middle order statistics of the valid prefix. Sorting is the wrong
+# primitive for the TPU VPU; the kernel instead RADIX-SELECTS the ranked
+# values: int32 keys are biased to order-preserving uint32 (x ^ 0x8000_
+# 0000), invalid entries mapped to the maximal key so they rank last
+# (exactly the sort-to-the-top trick of the reference), and the wanted
+# rank is found by an MSB->LSB nibble descend — 8 rounds, each counting
+# 16 bucket populations with pure compares/reductions (no sort, no
+# scatter). Selection is by RANK, so duplicated keys return the
+# identical VALUE the sorted reference indexes: the kernel is
+# bit-identical to `ops.chunk_center` including its `lo + (hi - lo)//2`
+# int32 tie/wrap semantics.
+
+_KEY_BIAS = np.uint32(0x80000000)
+_INVALID_KEY_SRC = np.int32(np.iinfo(np.int32).max)
+
+
+def _select_rank(keys: jax.Array, rank: jax.Array) -> jax.Array:
+    """Value of the `rank`-th smallest uint32 key (0-indexed)."""
+    n = keys.shape[0]
+    matched = jnp.ones((n,), bool)
+    val = jnp.uint32(0)
+    rr = rank.astype(jnp.int32)
+    for shift in range(28, -1, -4):
+        nibs = ((keys >> jnp.uint32(shift)) & jnp.uint32(0xF)) \
+            .astype(jnp.int32)
+        hit = matched[:, None] & (
+            nibs[:, None] == jax.lax.broadcasted_iota(jnp.int32, (n, 16), 1))
+        cnts = jnp.sum(hit, axis=0, dtype=jnp.int32)         # (16,)
+        cum = jnp.cumsum(cnts)
+        b = jnp.sum((cum <= rr).astype(jnp.int32))           # bucket of rank
+        below = jnp.where(b > 0, cum[jnp.maximum(b - 1, 0)], 0)
+        rr = rr - below
+        val = val | (b.astype(jnp.uint32) << jnp.uint32(shift))
+        matched = matched & (nibs == b)
+    return val
+
+
+def _center_from_q(q: jax.Array, valid: jax.Array) -> jax.Array:
+    """Count-aware median of q's valid entries — the in-kernel core
+    shared by the `dq_center` kernel and the `ceaz_chunk` megakernel.
+    Bitwise-identical to ops.chunk_center on one row."""
+    v = q.shape[0]
+    keys = jnp.where(valid, q, _INVALID_KEY_SRC).astype(jnp.uint32) \
+        ^ _KEY_BIAS
+    m = jnp.sum(valid, dtype=jnp.int32)
+    lo_i = jnp.maximum(m - 1, 0) // 2
+    hi_i = jnp.minimum(m // 2, v - 1)
+    lo = (_select_rank(keys, lo_i) ^ _KEY_BIAS).astype(jnp.int32)
+    hi = (_select_rank(keys, hi_i) ^ _KEY_BIAS).astype(jnp.int32)
+    return jnp.where(m > 0, lo + (hi - lo) // 2, 0).astype(jnp.int32)
+
+
+def _dq_center_kernel(q_ref, valid_ref, c_ref):
+    c_ref[0, 0] = _center_from_q(q_ref[0, :], valid_ref[0, :] != 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dq_center(q2: jax.Array, valid2: jax.Array, *, interpret: bool = True):
+    """q2 (C, V) i32, valid2 (C, V) -> centers (C,) i32; one radix-select
+    program per chunk row (the row must fit VMEM: V <= ~1M values)."""
+    C, V = q2.shape
+    centers = pl.pallas_call(
+        _dq_center_kernel,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, V), lambda c: (c, 0)),
+            pl.BlockSpec((1, V), lambda c: (c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda c: (c, 0)),
+        out_shape=jax.ShapeDtypeStruct((C, 1), jnp.int32),
+        interpret=interpret,
+    )(q2.astype(jnp.int32), valid2.astype(jnp.int32))
+    return centers[:, 0]

@@ -102,6 +102,26 @@ def chunk_center(q2: jax.Array, valid2: jax.Array) -> jax.Array:
     return jnp.where(m > 0, lo + (hi - lo) // 2, 0).astype(jnp.int32)
 
 
+# One dq_center program holds its whole row in VMEM (V i32 values + the
+# one-hot nibble counts); past this the kernel would spill, so the
+# wrapper falls back to the bit-identical jnp sort.
+_CENTER_ROW_LIMIT = 1 << 20
+
+
+def dq_center(q2: jax.Array, valid2: jax.Array, *, interpret=None):
+    """The `dq_center` dispatch op's 'pallas' implementation: per-row
+    radix-select median kernel, bit-identical to :func:`chunk_center`
+    (rows larger than VMEM fall back to it)."""
+    from ..dispatch import default_interpret
+    q2 = jnp.asarray(q2)
+    if q2.shape[1] > _CENTER_ROW_LIMIT:
+        return chunk_center(q2, jnp.asarray(valid2))
+    if interpret is None:
+        interpret = default_interpret()
+    return K.dq_center(q2, jnp.asarray(valid2),
+                       interpret=bool(interpret))
+
+
 def stream_dequantize(delta: jax.Array, eb, pipelines: int = 64):
     """Inverse of `stream_quantize`: per-row cumsum then de-scale."""
     flat = delta.reshape(-1)

@@ -25,10 +25,17 @@ from . import kernel as K
 def encode_pack(codes2, valid2, lengths_tbl, cwords_tbl, block_size: int,
                 w32: int, cands: int = 33, *,
                 interpret: Optional[bool] = None):
-    """Same signature and bit-exact output as ``ref.encode_pack``."""
+    """Same signature and bit-exact output as ``ref.encode_pack``.
+
+    Runs the word-tiled grid (``K.gather_pack_tiled``): VMEM per program
+    is bounded by (TILE_WORDS, block_size) regardless of chunk size, so
+    the same kernel covers test-size chunks and paper-scale 32 MB ones.
+    The untiled one-program-per-chunk ``K.gather_pack`` stays available
+    as the small-chunk comparison point (kernel microbench, tests).
+    """
     if interpret is None:
         interpret = default_interpret()
-    return K.gather_pack(
+    return K.gather_pack_tiled(
         jnp.asarray(codes2), jnp.asarray(valid2), jnp.asarray(lengths_tbl),
         jnp.asarray(cwords_tbl), block_size=block_size, w32=w32,
         cands=cands, interpret=bool(interpret))

@@ -1,0 +1,102 @@
+"""Public wrapper for the `ceaz_chunk` megakernel op ('pallas' impl).
+
+Two regimes behind one signature (both bit-identical to ref.ceaz_chunk):
+
+  * cv <= kernel._FUSE_ROW_LIMIT — ONE fused Pallas program per chunk
+    (kernel.ceaz_chunk_fused): no intermediate leaves VMEM.
+  * larger chunks — the word-tiled composition: tiled quantize+histogram
+    kernels (bounded TILE_SEG windows, halo BlockSpecs), the
+    radix-select `dq_center` kernel for value-direct centring, a tiny
+    jnp bank-select on the (C, 1024) histograms, and the shared
+    kernels/hufenc word-tiled gather-pack. Codes cross HBM exactly once
+    here — physically necessary once a chunk row outgrows VMEM.
+
+``interpret=None`` resolves per backend (compiled on TPU, interpreter
+everywhere else so CI exercises both regimes on CPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dispatch import default_interpret
+from ..dualquant import ops as dq_ops
+from ..hufenc import kernel as hufenc_k
+from . import kernel as K
+from . import ref as R
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "w32", "cands",
+                                    "predictor", "interpret"))
+def _ceaz_chunk_tiled(work2, prev2, valid2, ebs, bank_lengths,
+                      bank_cwords, *, block_size: int, w32: int,
+                      cands: int, predictor: str, interpret: bool):
+    C, cv = work2.shape
+    seg = K.TILE_SEG
+    ns = -(-cv // seg)
+    cvp = ns * seg
+    ebs2 = ebs.reshape(C, 1).astype(jnp.float32)
+    valid_p = jnp.zeros((C, cvp), jnp.int32).at[:, :cv].set(
+        valid2.astype(jnp.int32))
+    bank_lengths = bank_lengths.astype(jnp.int32)
+    bank_cwords = bank_cwords.astype(jnp.uint32)
+
+    if predictor == "lorenzo":
+        work_p = jnp.zeros((C, cvp + 1), jnp.float32).at[:, :cv].set(
+            work2.astype(jnp.float32))
+        q2p, codes2p, outl2p, delta2p, hists = K.lorenzo_tiles(
+            work_p, prev2.astype(jnp.float32), valid_p, ebs2, seg=seg,
+            interpret=interpret)
+        centers = jnp.zeros((C,), jnp.int32)
+    else:
+        work_p = jnp.zeros((C, cvp), jnp.float32).at[:, :cv].set(
+            work2.astype(jnp.float32))
+        q2p = K.value_quant_tiles(work_p, ebs2, seg=seg,
+                                  interpret=interpret)
+        # global reduction between the tiled passes (padding is invalid,
+        # so the padded rows centre identically to unpadded ones)
+        centers = dq_ops.dq_center(q2p, valid_p, interpret=interpret)
+        codes2p, outl2p, delta2p, hists = K.value_finalize_tiles(
+            q2p, valid_p, centers, seg=seg, interpret=interpret)
+        q2p = jnp.where(valid_p != 0, q2p, 0)
+
+    sel, totals = R.select_bank(hists, bank_lengths)
+    words, block_nbits = hufenc_k.gather_pack_tiled(
+        codes2p[:, :cv], valid2.astype(jnp.int32),
+        bank_lengths[sel], bank_cwords[sel], block_size=block_size,
+        w32=w32, cands=cands, interpret=interpret)
+    return (q2p[:, :cv], codes2p[:, :cv], outl2p[:, :cv], delta2p[:, :cv],
+            centers, hists, sel, totals, words, block_nbits)
+
+
+def ceaz_chunk(work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
+               block_size: int, w32: int, cands: int = 33,
+               predictor: str = "lorenzo", *,
+               interpret: Optional[bool] = None):
+    """Same signature and bit-exact outputs as ``ref.ceaz_chunk``."""
+    if interpret is None:
+        interpret = default_interpret()
+    work2 = jnp.asarray(work2, jnp.float32)
+    prev2 = jnp.asarray(prev2, jnp.float32)
+    valid2 = jnp.asarray(valid2)
+    ebs = jnp.asarray(ebs, jnp.float32)
+    bank_lengths = jnp.asarray(bank_lengths)
+    bank_cwords = jnp.asarray(bank_cwords)
+    if work2.shape[1] <= K._FUSE_ROW_LIMIT:
+        out = K.ceaz_chunk_fused(
+            work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
+            block_size=block_size, w32=w32, cands=cands,
+            predictor=predictor, interpret=bool(interpret))
+    else:
+        out = _ceaz_chunk_tiled(
+            work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
+            block_size=block_size, w32=w32, cands=cands,
+            predictor=predictor, interpret=bool(interpret))
+    (q2, codes2, outl2, delta2, centers, hists, sel, totals, words,
+     nbits) = out
+    return (q2, codes2, outl2.astype(bool), delta2, centers, hists, sel,
+            totals, words, nbits)

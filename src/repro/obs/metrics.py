@@ -37,7 +37,8 @@ __all__ = [
     "to_json", "reset",
     # canonical metric names (docs/OBSERVABILITY.md)
     "CHUNKS", "RAW_BYTES", "STORED_BYTES", "DECODED_CHUNKS",
-    "DECODED_BYTES", "SPEC_HITS", "SPEC_MISSES", "BANK_DRIFT",
+    "DECODED_BYTES", "SPEC_HITS", "SPEC_MISSES", "SPEC_WINDOW",
+    "BANK_DRIFT",
     "BANK_FALLBACKS", "BANK_REPACKS", "QUEUE_DEPTH", "CORRUPTION",
     "KERNEL_CALLS", "KERNEL_SECONDS",
 ]
@@ -53,6 +54,7 @@ DECODED_BYTES = "ceaz_decoded_bytes_total"         # bytes reconstructed
 # speculative fixed-ratio batching (runtime/fused.py)
 SPEC_HITS = "ceaz_speculation_hits_total"          # forecast eb held
 SPEC_MISSES = "ceaz_speculation_misses_total"      # chunk requantized alone
+SPEC_WINDOW = "ceaz_speculation_window"            # gauge: adaptive depth
 # codebook-bank mode (docs/CODEBOOK_BANK.md)
 BANK_DRIFT = "ceaz_bank_drift"                     # gauge: last achieved/ideal-1
 BANK_FALLBACKS = "ceaz_bank_exact_fallbacks_total"  # whole-array re-encodes

@@ -622,6 +622,67 @@ def _bank_pass_fn(kernel_impl: str, predictor: str, ndim: int,
 
 
 @functools.lru_cache(maxsize=None)
+def _mega_pass_fn(kernel_impl: str, predictor: str, n_chunks: int,
+                  chunk_values: int, block_size: int, w32: int,
+                  cands: int, k_outlier: int, k_literal: int,
+                  stats_on_device: bool):
+    """:func:`_bank_pass_fn` twin built on the `ceaz_chunk` megakernel
+    dispatch op: quantize -> histogram -> bank-select -> pack run as ONE
+    op (one Pallas program per chunk under 'pallas') instead of a trace
+    composed from the stage ops. Same return contract, bit-identical
+    outputs. Only the shapes whose Lorenzo halo is a single raw value
+    qualify — 1-D streams and value-direct — because the op quantizes
+    each chunk row from a one-value halo, which reproduces global
+    Lorenzo bitwise only in 1-D (the halo re-quantizes exactly the
+    q[i-1] the global pass used; see kernels/megakernel/ref.py).
+    Higher-rank Lorenzo keeps using `_bank_pass_fn`.
+    """
+    ceaz_op = dispatch.resolve("ceaz_chunk", kernel_impl)
+    op_pred = "value" if predictor == "none" else "lorenzo"
+
+    @jax.jit
+    def run(work, eb, bank_lengths, bank_cwords):
+        flat = work.reshape(-1)
+        n = flat.shape[0]
+        pad = n_chunks * chunk_values - n
+        work2 = jnp.pad(flat, (0, pad)).reshape(n_chunks, chunk_values)
+        valid2 = (jnp.arange(n_chunks * chunk_values, dtype=jnp.int32)
+                  < n).reshape(n_chunks, chunk_values)
+        ci = jnp.arange(n_chunks, dtype=jnp.int32)
+        if op_pred == "lorenzo":
+            # row i's halo: the RAW predecessor of its first value
+            # (row 0 gets the stream head's zero-pad)
+            prev2 = jnp.where(
+                ci == 0, jnp.float32(0),
+                flat[jnp.maximum(ci * chunk_values - 1, 0)])[:, None]
+        else:
+            prev2 = jnp.zeros((n_chunks, 1), jnp.float32)
+        ebs = jnp.broadcast_to(jnp.asarray(eb, jnp.float32), (n_chunks,))
+        (q2, codes2, outl2, delta2, centers, hists, sel, totals, words,
+         block_nbits) = ceaz_op(work2, prev2, valid2, ebs, bank_lengths,
+                                bank_cwords, block_size, w32, cands,
+                                op_pred)
+        q = q2.reshape(-1)[:n]
+        centers_out = centers if op_pred == "value" else None
+        if not stats_on_device:
+            return (hists, sel, totals, words, block_nbits,
+                    None, None, None, None, None, None,
+                    codes2, outl2, delta2, valid2, q, centers_out)
+        oidx, odelta, ocount = jax.vmap(
+            lambda m, d: _extract_sparse(m, d, k_outlier))(
+            outl2 & valid2, delta2)
+        rec = q.astype(jnp.float32) * (2.0 * eb)
+        margin = 16.0 * _EPS32 * (jnp.abs(rec) + jnp.abs(flat)) + 1e-38
+        cand = jnp.abs(rec - flat) > (eb - margin)
+        lit_idx, lit_q, lit_count = _extract_sparse(cand, q, k_literal)
+        return (hists, sel, totals, words, block_nbits,
+                oidx, odelta, ocount, lit_idx, lit_q, lit_count,
+                codes2, outl2, delta2, valid2, q, centers_out)
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
 def _bank_repack_fn(kernel_impl: str, block_size: int, w32: int,
                     cands: int):
     """Pack-only retry at full bank capacity for provisioning overflow:
@@ -674,11 +735,22 @@ def compress_error_bounded_bank(x: np.ndarray, eb: float, mode: str,
                     chunk_values)
     w32_full = _bank_w32(int(bank.lengths.max()), chunk_values)
     cands = _cand_window(int(bank.lengths.min()))
-    run = _bank_pass_fn(
-        kernel_impl, predictor, ndim, n_chunks, chunk_values, block_size,
-        w32, cands, _k_outlier(chunk_values), min(n, max(256, n // 256)),
-        stats_on_device)
-    with dispatch.measure("hufenc", kernel_impl) as _m:
+    # the megakernel op covers exactly the shapes whose Lorenzo halo is
+    # one raw value — 1-D streams and value-direct; higher-rank Lorenzo
+    # keeps the stage-composed trace (same outputs either way)
+    use_mega = predictor == "none" or ndim == 1
+    if use_mega:
+        run = _mega_pass_fn(
+            kernel_impl, predictor, n_chunks, chunk_values, block_size,
+            w32, cands, _k_outlier(chunk_values),
+            min(n, max(256, n // 256)), stats_on_device)
+    else:
+        run = _bank_pass_fn(
+            kernel_impl, predictor, ndim, n_chunks, chunk_values,
+            block_size, w32, cands, _k_outlier(chunk_values),
+            min(n, max(256, n // 256)), stats_on_device)
+    with dispatch.measure("ceaz_chunk" if use_mega else "hufenc",
+                          kernel_impl) as _m:
         (hists, sel, totals, words, block_nbits, oidx, odelta, ocount,
          lit_idx, lit_q, lit_count, codes2, outl2, delta2, valid2, q,
          centers) = _m.done(run(
@@ -743,7 +815,8 @@ def compress_error_bounded_bank(x: np.ndarray, eb: float, mode: str,
 
 def _spec_window(speculation) -> int:
     """Resolve the speculation knob: 'off' -> 1 (the sequential oracle
-    loop), 'auto' -> 8, an int >= 1 -> that window size."""
+    loop), 'auto' -> 8 (then adapted per window, see `_next_window`),
+    an int >= 1 -> that fixed window size."""
     if speculation == "off":
         return 1
     if speculation == "auto":
@@ -754,6 +827,26 @@ def _spec_window(speculation) -> int:
     raise ValueError(
         f"speculation must be 'off', 'auto' or an int >= 1, "
         f"got {speculation!r}")
+
+
+# adaptive depth bounds ('auto' only): the floor keeps speculation from
+# silently degrading into the sequential loop, the cap bounds how much
+# speculative quantization one eb shift can discard
+_SPEC_WINDOW_MIN = 2
+_SPEC_WINDOW_MAX = 64
+
+
+def _next_window(window: int, misses: int) -> int:
+    """Adaptive speculation depth: a fully-hit window doubles the next
+    one (the controller is sitting on its quantized update grid, so
+    deeper speculation is free), any miss halves it (the eb is moving;
+    keep the mispredicted work small). The depth NEVER changes the
+    emitted bytes — every committed chunk's eb is replayed exactly —
+    only how much speculative work a miss throws away. Exposed as the
+    ceaz_speculation_window gauge."""
+    if misses == 0:
+        return min(window * 2, _SPEC_WINDOW_MAX)
+    return max(window // 2, _SPEC_WINDOW_MIN)
 
 
 @jax.jit
@@ -830,6 +923,87 @@ def _encode_window(hists: Sequence[np.ndarray], codes_all, valid_all,
                         chunk_values, decisions, block_size, kernel_impl)
 
 
+@functools.lru_cache(maxsize=None)
+def _mega_window_fn(kernel_impl: str, w: int, chunk_values: int,
+                    block_size: int, w32: int, cands: int,
+                    k_literal: int, stats_on_device: bool):
+    """One `ceaz_chunk` op call over a speculation window: each row is
+    an independent 1-D stream (zero halo — exactly the per-chunk
+    zero-pad the sequential fixed-ratio loop uses) at its own
+    speculative eb. The packed words come back WITH the histograms, so
+    a fully-hit window needs no second pass at all; only repaired rows
+    rerun."""
+    ceaz_op = dispatch.resolve("ceaz_chunk", kernel_impl)
+
+    @jax.jit
+    def run(seg2, ebs, bank_lengths, bank_cwords):
+        valid2 = jnp.ones((w, chunk_values), bool)
+        prev2 = jnp.zeros((w, 1), jnp.float32)
+        (q2, codes2, outl2, delta2, _centers, hists, sel, totals, words,
+         block_nbits) = ceaz_op(seg2, prev2, valid2, ebs, bank_lengths,
+                                bank_cwords, block_size, w32, cands,
+                                "lorenzo")
+        ocounts = jnp.sum(outl2, axis=1, dtype=jnp.int32)
+        if not stats_on_device:
+            return (hists, sel, totals, words, block_nbits, ocounts,
+                    codes2, outl2, delta2, q2, None, None, None)
+        st = jax.vmap(lambda c, v, q, wk, e: _device_stats(
+            c[None], v[None], q, wk, e, k_literal))(
+            codes2, valid2, q2, seg2, ebs)
+        return (hists, sel, totals, words, block_nbits, ocounts,
+                codes2, outl2, delta2, q2, st[1], st[2], st[3])
+
+    return run
+
+
+def _mega_window(seg2: np.ndarray, ebs, bank, block_size: int,
+                 kernel_impl: str, stats_on_device: bool):
+    """Bank-mode window pass via the megakernel op.
+
+    Returns (p1s, ocounts, hists, sel, totals, words, block_nbits) with
+    the array results as writable numpy rows so the repair path can
+    replace a mispredicted row in place. Provisioned at the bank's full
+    bit-rate (no repack path needed): `_assemble_chunks` trims every
+    row to its exact payload, so provisioning never changes bytes.
+    """
+    w, cv = seg2.shape
+    w32 = _bank_w32(int(bank.lengths.max()), cv)
+    cands = _cand_window(int(bank.lengths.min()))
+    k_lit = min(cv, max(256, cv // 256))
+    run = _mega_window_fn(kernel_impl, w, cv, block_size, w32, cands,
+                          k_lit, stats_on_device)
+    with dispatch.measure("ceaz_chunk", kernel_impl) as m:
+        out = m.done(run(jnp.asarray(seg2, jnp.float32),
+                         jnp.asarray(ebs, jnp.float32),
+                         jnp.asarray(bank.lengths, jnp.int32),
+                         jnp.asarray(bank.code_table(), jnp.uint32)))
+    (hists, sel, totals, words, nbits, ocounts, codes2, outl2, delta2,
+     q2, lit_idx, lit_q, lit_count) = out
+    # np.array (not asarray): the repair path overwrites rows in place
+    hists_np = np.array(hists)
+    p1s: List[_Pass1] = []
+    if stats_on_device:
+        for j in range(w):
+            p1s.append(_Pass1(codes2[j][None], outl2[j][None],
+                              delta2[j][None], jnp.ones((1, cv), bool),
+                              q2[j], hists_np[j:j + 1], cv, 1, cv, True,
+                              lit_idx=lit_idx[j], lit_q=lit_q[j],
+                              lit_count=lit_count[j]))
+    else:
+        outl_host = np.asarray(outl2)
+        delta_host = np.asarray(delta2)
+        q_host = np.asarray(q2)
+        for j in range(w):
+            p1s.append(_Pass1(None, None, None, None, None,
+                              hists_np[j:j + 1], cv, 1, cv, False,
+                              outl_host=outl_host[j:j + 1],
+                              delta_host=delta_host[j:j + 1],
+                              q_host=q_host[j]))
+    return (p1s, np.array(ocounts), hists_np, np.array(sel),
+            np.array(totals).astype(np.int64), np.array(words),
+            np.array(nbits))
+
+
 def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
                          chunk_values: int, block_size: int,
                          adaptive: bool = True, exact_build: bool = False,
@@ -855,8 +1029,13 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
     (``speculation='off'``) on EVERY input — a miss costs one extra
     single-chunk device pass, never different bytes.
 
-    `speculation`: 'off' (sequential oracle), 'auto' (window 8), or an
-    explicit window size >= 1.
+    `speculation`: 'off' (sequential oracle), 'auto' (start at window
+    8, then adapt: double after a fully-hit window, halve on any miss
+    — see `_next_window`; the depth is visible as the
+    ceaz_speculation_window gauge), or an explicit fixed window size
+    >= 1. With a BankCoder the window runs through the `ceaz_chunk`
+    megakernel op — packed payloads come back with the pass-1
+    histograms, so a fully-hit window needs no second encode pass.
     """
     from ..core.ceaz import CEAZCompressed
     flat = x.reshape(-1)
@@ -864,6 +1043,8 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
     if stats_on_device is None:
         stats_on_device = _default_stats_on_device()
     window = _spec_window(speculation)
+    adaptive_window = speculation == "auto"
+    use_mega = isinstance(coder, BankCoder)
     chunks, lit_idx_parts, lit_val_parts = [], [], []
     pos = 0                              # position in full-size chunks
     n_full = n // chunk_values
@@ -875,8 +1056,14 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
         seg2 = np.asarray(flat[pos * chunk_values:(pos + w) * chunk_values],
                           np.float32).reshape(w, chunk_values)
         with ot.span("fused.spec_window_pass1", window=w):
-            p1s, ocounts, codes_all, valid_all = _window_pass1(
-                seg2, ebs, stats_on_device)
+            if use_mega:
+                (p1s, ocounts, m_hists, m_sel, m_totals, m_words,
+                 m_nbits) = _mega_window(seg2, ebs, coder.bank,
+                                         block_size, kernel_impl,
+                                         stats_on_device)
+            else:
+                p1s, ocounts, codes_all, valid_all = _window_pass1(
+                    seg2, ebs, stats_on_device)
         # replay the exact sequential feedback chain from the summaries;
         # a mispredicted chunk requantizes alone at its exact bound
         decisions, fed_bits, repaired = [], [], {}
@@ -884,13 +1071,33 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
             if j > 0 and ebs[j] != float(ctrl.eb):
                 ebs[j] = float(ctrl.eb)
                 with ot.span("fused.spec_repair", chunk=pos + j):
-                    p1s[j] = _run_pass1(jnp.asarray(seg2[j]), ebs[j], 1,
-                                        chunk_values, stats_on_device)
-                    # exact escape count from the (cached) outlier
-                    # extraction
-                    ocounts[j] = len(_outliers(p1s[j])[0][0])
-                    repaired[j] = p1s[j].codes2
+                    if use_mega:
+                        # one-row megakernel rerun at the exact bound
+                        # replaces the row's packed payload in place
+                        r = _mega_window(seg2[j:j + 1], [ebs[j]],
+                                         coder.bank, block_size,
+                                         kernel_impl, stats_on_device)
+                        p1s[j] = r[0][0]
+                        ocounts[j] = int(r[1][0])
+                        m_hists[j] = r[2][0]
+                        m_sel[j] = r[3][0]
+                        m_totals[j] = r[4][0]
+                        m_words[j] = r[5][0]
+                        m_nbits[j] = r[6][0]
+                        repaired[j] = True
+                    else:
+                        p1s[j] = _run_pass1(jnp.asarray(seg2[j]), ebs[j],
+                                            1, chunk_values,
+                                            stats_on_device)
+                        # exact escape count from the (cached) outlier
+                        # extraction
+                        ocounts[j] = len(_outliers(p1s[j])[0][0])
+                        repaired[j] = p1s[j].codes2
             d = _policy(p1s[j].hists, coder, adaptive, exact_build)[0]
+            if use_mega:
+                # the host bank replay must land on the same row the
+                # device argmin picked (integer-exact statistic)
+                assert d.bank_index == int(m_sel[j])
             nblocks = max(1, -(-chunk_values // block_size))
             bits = _chunk_total_bits(p1s[j].hists[0], d, int(ocounts[j]),
                                      nblocks)
@@ -901,12 +1108,17 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
         # speculated, the repaired ones mispredicted
         om.add(om.SPEC_MISSES, len(repaired))
         om.add(om.SPEC_HITS, (w - 1) - len(repaired))
-        if repaired:        # one batched row replacement, not per miss
-            codes_all = codes_all.at[jnp.asarray(list(repaired))].set(
-                jnp.concatenate(list(repaired.values())))
-        words_np, nbits_np, totals = _encode_window(
-            [p.hists for p in p1s], codes_all, valid_all, decisions,
-            block_size, kernel_impl, chunk_values)
+        if use_mega:
+            # the packed payload came back with pass 1 (and repairs
+            # replaced their rows above) — no second encode pass
+            words_np, nbits_np, totals = m_words, m_nbits, m_totals
+        else:
+            if repaired:    # one batched row replacement, not per miss
+                codes_all = codes_all.at[jnp.asarray(list(repaired))].set(
+                    jnp.concatenate(list(repaired.values())))
+            words_np, nbits_np, totals = _encode_window(
+                [p.hists for p in p1s], codes_all, valid_all, decisions,
+                block_size, kernel_impl, chunk_values)
         for j in range(w):
             ch = _assemble_chunks(p1s[j], words_np[j:j + 1],
                                   nbits_np[j:j + 1], totals[j:j + 1],
@@ -921,6 +1133,9 @@ def compress_fixed_ratio(x: np.ndarray, ctrl, coder: AdaptiveCoder,
             lit_val_parts.append(lv)
             chunks.append(ch)
         pos += w
+        if adaptive_window:
+            window = _next_window(window, len(repaired))
+            om.set_gauge(om.SPEC_WINDOW, window)
     # sequential tail: remaining full chunks (speculation off, or one
     # full chunk left) plus the final partial chunk
     for s in range(pos * chunk_values, n, chunk_values):

@@ -1,0 +1,51 @@
+"""Drift guard for the benchmark harness registry.
+
+``benchmarks/run.py`` wires every lane into its ``suites`` list by
+hand; a lane module that defines ``run()`` but never gets registered
+silently drops out of CI's BENCH artifact (this bit ``sort_latency``
+and ``roofline_report`` once). The guard parses the harness SOURCE —
+no heavy lane imports — so a new ``benchmarks/<lane>.py`` fails fast
+until it is registered (or explicitly listed here as a non-lane
+helper).
+"""
+import ast
+import re
+from pathlib import Path
+
+BENCH = Path(__file__).resolve().parent.parent / "benchmarks"
+
+# modules that define run() helpers but are not stand-alone lanes
+NON_LANES = {"common", "run"}
+
+
+def _defines_run(path: Path) -> bool:
+    tree = ast.parse(path.read_text())
+    return any(isinstance(node, ast.FunctionDef) and node.name == "run"
+               for node in tree.body)
+
+
+def test_every_lane_is_registered():
+    src = (BENCH / "run.py").read_text()
+    suites = re.search(r"suites\s*=\s*\[(.*?)\]", src, re.S).group(1)
+    registered = set(re.findall(r"(\w+)\.run", suites))
+    lanes = {p.stem for p in BENCH.glob("*.py")
+             if p.stem not in NON_LANES and _defines_run(p)}
+    missing = lanes - registered
+    assert not missing, (
+        f"benchmark lanes defining run() but absent from run.py suites: "
+        f"{sorted(missing)}")
+    unknown = registered - lanes
+    assert not unknown, (
+        f"run.py registers lanes with no run() on disk: {sorted(unknown)}")
+
+
+def test_lane_modules_are_imported_by_harness():
+    """Every registered lane must also be in run.py's import list —
+    a registry entry without the import is a NameError at run time."""
+    src = (BENCH / "run.py").read_text()
+    suites = re.search(r"suites\s*=\s*\[(.*?)\]", src, re.S).group(1)
+    registered = set(re.findall(r"(\w+)\.run", suites))
+    imports = set(re.findall(r"\b(\w+)\b",
+                             re.search(r"from \. import \((.*?)\)",
+                                       src, re.S).group(1)))
+    assert registered <= imports, sorted(registered - imports)

@@ -152,3 +152,94 @@ def test_unknown_speculation_raises():
                            speculation="warp"), offline_codebook=OFFLINE)
     with pytest.raises(ValueError, match="speculation"):
         comp.compress(np.ones(4096, np.float32))
+
+
+# -- encode megakernel column -------------------------------------------------
+# Bank-mode 1-D encode routes through the ceaz_chunk megakernel (one
+# program per chunk); the staged BankCoder reference is the oracle.
+
+def _toy_bank():
+    from repro.core import train_codebook_bank
+    rng = np.random.default_rng(7)
+    fields = [np.cumsum(rng.standard_normal(40000)).astype(np.float32) / 10,
+              np.cumsum(rng.standard_normal(40000)).astype(np.float32) / 50]
+    return train_codebook_bank(fields, n_books=4)
+
+
+BANK = _toy_bank()
+
+
+def _check_bank_combo(x, mode, kw, predictor, kernel_impl,
+                      chunk_bytes=1 << 14):
+    mk = lambda uf: CEAZ(
+        CEAZConfig(mode=mode, predictor=predictor, chunk_bytes=chunk_bytes,
+                   block_size=1024, backend="jax", use_fused=uf,
+                   kernel_impl=kernel_impl, codebook="bank",
+                   bank_drift_tol=float("inf"), **kw),
+        offline_codebook=OFFLINE, bank=BANK)
+    staged, fused = mk(False), mk(True)
+    cs, cf = staged.compress(x), fused.compress(x)
+    assert_streams_bit_identical(cs, cf)
+    assert np.array_equal(staged._decompress_staged(cs),
+                          fused.decompress(cf))
+
+
+@pytest.mark.parametrize("kernel_impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("predictor", ["lorenzo", "none"])
+@pytest.mark.parametrize("mode,kw", MODES, ids=[m for m, _ in MODES])
+def test_bank_megakernel_grid(mode, kw, predictor, kernel_impl):
+    """The single-program ceaz_chunk path (jnp twin and Pallas
+    interpret) is byte-identical to the staged BankCoder reference."""
+    kind = "noise" if predictor == "none" else "smooth"
+    n = 6000 if kernel_impl == "pallas" else 30000
+    x = _data(kind, n=n).astype(np.float32)
+    _check_bank_combo(x, mode, kw, predictor, kernel_impl)
+
+
+def test_bank_megakernel_past_program_limit():
+    """Chunks larger than the fused megakernel's one-program VMEM limit
+    (2^17 values) take the word-tiled composition and stay
+    byte-identical to the staged reference."""
+    from repro.kernels.megakernel import kernel as MK
+    cv = 1 << 18                                 # 2 x _FUSE_ROW_LIMIT
+    assert cv > MK._FUSE_ROW_LIMIT
+    x = _data("smooth", n=cv + cv // 2).astype(np.float32)
+    _check_bank_combo(x, "abs", dict(eb=1e-3), "lorenzo", "jnp",
+                      chunk_bytes=4 * cv)
+    _check_bank_combo(x, "fixed_ratio", dict(target_ratio=10.0),
+                      "lorenzo", "jnp", chunk_bytes=4 * cv)
+
+
+# -- adaptive speculation -----------------------------------------------------
+
+def test_speculation_auto_is_byte_invariant():
+    """speculation='auto' (adaptive window) emits the same bytes as any
+    fixed window — depth only moves latency, never the stream."""
+    x = _data("smooth", n=20 * 4096).astype(np.float32)
+    mk = lambda spec: CEAZ(
+        CEAZConfig(mode="fixed_ratio", target_ratio=8.0, use_fused=True,
+                   chunk_bytes=1 << 14, speculation=spec),
+        offline_codebook=OFFLINE)
+    ref = mk("off").compress(x)
+    for spec in ("auto", 64):
+        assert_streams_bit_identical(ref, mk(spec).compress(x))
+
+
+def test_next_window_policy_and_gauge():
+    """Hit streaks double the speculation depth (capped), any miss
+    halves it (floored); a fused auto run publishes the final depth as
+    the ceaz_speculation_window gauge."""
+    from repro.obs import metrics as om
+    from repro.runtime import fused as F
+    assert F._next_window(8, 0) == 16
+    assert F._next_window(F._SPEC_WINDOW_MAX, 0) == F._SPEC_WINDOW_MAX
+    assert F._next_window(8, 3) == 4
+    assert F._next_window(F._SPEC_WINDOW_MIN, 1) == F._SPEC_WINDOW_MIN
+    x = _data("smooth", n=12 * 4096).astype(np.float32)
+    comp = CEAZ(CEAZConfig(mode="fixed_ratio", target_ratio=8.0,
+                           use_fused=True, chunk_bytes=1 << 14,
+                           speculation="auto"), offline_codebook=OFFLINE)
+    comp.compress(x)
+    depth = om.snapshot().get(om.SPEC_WINDOW)
+    assert depth is not None
+    assert F._SPEC_WINDOW_MIN <= depth <= F._SPEC_WINDOW_MAX

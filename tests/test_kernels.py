@@ -182,3 +182,162 @@ def test_bitpack_jnp_twin_matches_kernel(rng):
     w_jnp = np.asarray(pack_jnp(jnp.asarray(v), 8))
     u = np.asarray(unpack_jnp(jnp.asarray(w_jnp), len(v), 8))
     np.testing.assert_array_equal(u, v)
+
+
+# -- word-tiled gather-pack (unbounded chunk sizes) ---------------------------
+
+def _pack_case(rng, C, cv, sigma=40):
+    """Codes + per-chunk codebook rows with full symbol support (every
+    valid symbol gets >= 1 bit, the tiled coverage contract)."""
+    codes = np.clip(rng.normal(512, sigma, (C, cv)), 0, 1023) \
+        .astype(np.int32)
+    cb = H.Codebook.from_freqs(
+        np.bincount(codes.reshape(-1), minlength=1024) + 1)
+    lengths = np.broadcast_to(cb.lengths.astype(np.int32), (C, 1024))
+    cwords = np.broadcast_to(cb.codes.astype(np.uint32), (C, 1024))
+    return codes, np.array(lengths), np.array(cwords)
+
+
+def _tiled_vs_ref(codes, valid, lengths, cwords, block_size, w32):
+    args = (jnp.asarray(codes), jnp.asarray(valid), jnp.asarray(lengths),
+            jnp.asarray(cwords), block_size, w32, 33)
+    wr, nr = ER.encode_pack(*args[:4], *args[4:])
+    wk, nk = EK.gather_pack_tiled(*args[:4], block_size=block_size,
+                                  w32=w32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(wk), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(nk), np.asarray(nr))
+
+
+@pytest.mark.parametrize("w32", [512, 1024, 1200, 8192])
+def test_gather_pack_tiled_word_tile_boundaries(w32, rng):
+    """The payload is tiled in 512-word output tiles: exact one- and
+    two-tile capacities, a ragged tail tile, and an over-provisioned
+    capacity whose trailing tiles are all past the payload must all be
+    bit-identical to the untiled reference (truncation included)."""
+    codes, lengths, cwords = _pack_case(rng, 3, 5000)
+    valid = np.ones((3, 5000), bool)
+    valid[-1, 4321:] = False
+    _tiled_vs_ref(codes, valid, lengths, cwords, 1024, w32)
+
+
+def test_gather_pack_tiled_zero_length_tail(rng):
+    """An all-invalid row (zero payload bits) and a row whose payload
+    ends exactly on a word-tile boundary both pack to zeros / exact
+    prefixes, matching the reference."""
+    codes, lengths, cwords = _pack_case(rng, 2, 4096)
+    valid = np.ones((2, 4096), bool)
+    valid[1, :] = False                 # zero-length row
+    _tiled_vs_ref(codes, valid, lengths, cwords, 1024, 2048)
+
+
+def test_gather_pack_tiled_past_single_program_limit(rng):
+    """Chunks far beyond the old one-program-per-chunk VMEM ceiling
+    (~128k values) pack bit-identically through the word-tiled grid."""
+    cv = 200_000
+    codes, lengths, cwords = _pack_case(rng, 2, cv)
+    valid = np.ones((2, cv), bool)
+    valid[-1, cv - 77:] = False
+    need = int(np.sum(lengths[0][codes[0]]))
+    w32 = -(-2 * ((need + 63) // 64 + 1) // 128) * 128
+    _tiled_vs_ref(codes, valid, lengths, cwords, 4096, w32)
+
+
+def test_encode_pack_routes_through_tiled(rng):
+    """The public hufenc op wrapper feeds the word-tiled kernel (the
+    untiled gather-pack stays only as a microbench/test subject)."""
+    codes, lengths, cwords = _pack_case(rng, 2, 3000)
+    valid = np.ones((2, 3000), bool)
+    args = (jnp.asarray(codes), jnp.asarray(valid), jnp.asarray(lengths),
+            jnp.asarray(cwords), 1024, 2048, 33)
+    wo, no = EO.encode_pack(*args, interpret=True)
+    wr, nr = ER.encode_pack(*args)
+    np.testing.assert_array_equal(np.asarray(wo), np.asarray(wr))
+    np.testing.assert_array_equal(np.asarray(no), np.asarray(nr))
+
+
+# -- dq_center radix-select kernel -------------------------------------------
+
+def test_dq_center_kernel_vs_ref(rng):
+    """Count-aware median via in-VMEM radix-select vs the sort-based
+    jnp reference: ragged valid prefixes, heavy duplicates, an
+    all-invalid row, and a spread whose (hi - lo) wraps int32."""
+    V = 5000
+    rows = [rng.integers(-2**31, 2**31 - 1, V),
+            np.repeat(rng.integers(-50, 50, 10), V // 10),
+            rng.integers(-5, 5, V),
+            np.zeros(V, np.int64),
+            np.concatenate([[-2**31 + 1, 2**31 - 1], np.zeros(V - 2)])]
+    q2 = np.stack(rows).astype(np.int32)
+    valid2 = np.ones_like(q2, bool)
+    valid2[0, 3000:] = False
+    valid2[1, 1:] = False               # single-value row
+    valid2[3, :] = False                # zero-valid row -> centre 0
+    valid2[4, 2:] = False               # int32-wrap midpoint pair
+    ck = DK.dq_center(jnp.asarray(q2), jnp.asarray(valid2.astype(np.int32)),
+                      interpret=True)
+    cr = DO.chunk_center(jnp.asarray(q2), jnp.asarray(valid2))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+    assert int(np.asarray(ck)[3]) == 0
+    co = DO.dq_center(jnp.asarray(q2), jnp.asarray(valid2))
+    np.testing.assert_array_equal(np.asarray(co), np.asarray(cr))
+
+
+# -- ceaz_chunk megakernel ----------------------------------------------------
+
+def _bank_tables(rng):
+    lens, cws = [], []
+    for sigma in (5, 20, 80, 300):
+        codes = np.clip(rng.normal(512, sigma, 20000), 0, 1023) \
+            .astype(np.int32)
+        cb = H.Codebook.from_freqs(np.bincount(codes, minlength=1024) + 1)
+        lens.append(cb.lengths.astype(np.int32))
+        cws.append(cb.codes.astype(np.uint32))
+    return np.stack(lens), np.stack(cws)
+
+
+@pytest.mark.parametrize("predictor", ["lorenzo", "value"])
+@pytest.mark.parametrize("cv", [4096, 140_000],
+                         ids=["fused", "tiled"])
+def test_ceaz_chunk_megakernel_vs_ref(predictor, cv, rng):
+    """The one-program-per-chunk megakernel (and its word-tiled
+    composition past the VMEM limit) is bit-identical to the jnp twin
+    composed from the stage ops, on chained-halo Lorenzo and
+    value-direct rows with a ragged tail."""
+    from repro.kernels.megakernel import kernel as MK
+    from repro.kernels.megakernel import ops as MO
+    from repro.kernels.megakernel import ref as MR
+    assert (cv <= MK._FUSE_ROW_LIMIT) == (cv == 4096)
+    C = 2
+    flat = np.cumsum(rng.standard_normal(C * cv)).astype(np.float32) / 10
+    work2 = flat.reshape(C, cv)
+    prev2 = (np.concatenate([[0.0], work2[:-1, -1]])
+             .astype(np.float32).reshape(C, 1)
+             if predictor == "lorenzo" else np.zeros((C, 1), np.float32))
+    valid2 = np.ones((C, cv), bool)
+    valid2[-1, cv - 13:] = False
+    ebs = np.array([1e-3, 2e-3], np.float32)
+    bl, bc = _bank_tables(rng)
+    w32 = -(-2 * ((int(bl.max()) * cv + 63) // 64 + 1) // 128) * 128
+    args = (work2, prev2, valid2, ebs, bl, bc, 1024, w32, 33, predictor)
+    ro = MR.ceaz_chunk(*args)
+    po = MO.ceaz_chunk(*args, interpret=True)
+    for name, a, b in zip(("q2", "codes2", "outl2", "delta2", "centers",
+                           "hists", "sel", "totals", "words", "nbits"),
+                          ro, po):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_ceaz_chunk_dispatch_registration():
+    """Both impls resolve through the registry; 'auto' picks the jnp
+    twin off-TPU and the Pallas megakernel on TPU."""
+    from repro.kernels import dispatch as D
+    from repro.kernels.megakernel import ops as MO
+    from repro.kernels.megakernel import ref as MR
+    assert D.resolve("ceaz_chunk", "jnp") is MR.ceaz_chunk
+    assert D.resolve("ceaz_chunk", "pallas") is MO.ceaz_chunk
+    assert D.auto_impl("ceaz_chunk", "cpu") == "jnp"
+    assert D.auto_impl("ceaz_chunk", "tpu") == "pallas"
+    assert D.auto_impl("dq_center", "tpu") == "pallas"
+    from repro.kernels.dualquant import ops as DQO
+    assert D.resolve("dq_center", "pallas") is DQO.dq_center
