@@ -3,20 +3,21 @@ layer, with a bit-identity gate and an opt-in timing gate.
 
 Times the dispatchable hot loops of the fused pipeline — the encode
 gather-pack (`hufenc`), the canonical-table decode walk (`hufdec`) and
-the bank-mode encode megakernel (`ceaz_chunk`, timed against a
-stage-boundary baseline) — for every registered implementation, on
-synthetic chunk batches shaped like what ``runtime/fused.py`` /
-``runtime/fused_decode.py`` actually stage. Emits one JSON row per
-(op, impl, case) into the BENCH artifact trajectory
-(results/bench/kernel_microbench.json).
+the per-chunk megakernels in both directions (`ceaz_chunk` /
+`ceaz_chunk_dec`, each timed against a stage-boundary baseline) — for
+every registered implementation, on synthetic chunk batches shaped
+like what ``runtime/fused.py`` / ``runtime/fused_decode.py`` actually
+stage. Emits one JSON row per (op, impl, case) into the BENCH artifact
+trajectory (results/bench/kernel_microbench.json).
 
 Gate policy: bit-identity between every implementation pair is ALWAYS
 asserted. Timing is gated only under ``CEAZ_TIMING_GATE=1`` (the
 nightly lane sets it):
 
-  * every backend — the one-call `ceaz_chunk` op must not be slower
-    than the same pipeline with a host sync at every stage boundary
-    (quantize | histogram | select | pack), within a noise margin;
+  * every backend — the one-call `ceaz_chunk` / `ceaz_chunk_dec` ops
+    must not be slower than the same pipeline with a host sync at
+    every stage boundary (encode: quantize | histogram | select |
+    pack; decode: walk | patch+inverse), within a noise margin;
   * non-CPU backends only (the env-guarded ``hardware-gates`` job) —
     the compiled 'pallas' megakernel must additionally beat the 'jnp'
     trace. Off-TPU, 'pallas' runs under ``interpret=True``, which is a
@@ -164,6 +165,58 @@ def _staged_ceaz(work2, prev2, valid2, ebs, bl, bc, w32):
     return hists, sel, totals, words, nbits
 
 
+# -- ceaz_chunk_dec: decode megakernel vs stage-boundary baseline -------------
+# Mirror of the encode baseline: the SAME decode dataflow cut at its
+# PR 3 stage boundary — the batched hufdec walk, a host sync, then the
+# patch + inverse-dual-quant pass — i.e. the HBM round-trip of the
+# decoded codes that the one-call op deletes.
+
+def _mega_decode_batch(enc_out, valid2, bank_lengths_np):
+    """Restage the encode megakernel's outputs as ceaz_chunk_dec inputs
+    (the runtime's grouped-batch staging: +2 words of tail slack,
+    ascending-order outlier deltas, one chained Lorenzo segment)."""
+    q2 = np.asarray(enc_out[0])
+    outl2 = np.asarray(enc_out[2])
+    delta2 = np.asarray(enc_out[3])
+    sel = np.asarray(enc_out[6]).astype(np.int32)
+    words = np.asarray(enc_out[8])
+    nbits = np.asarray(enc_out[9]).astype(np.int32)
+    C = q2.shape[0]
+    words2 = np.zeros((C, words.shape[1] + 2), np.uint32)
+    words2[:, :words.shape[1]] = words
+    counts = valid2.sum(axis=1).astype(np.int32)
+    tabs = [H.codebook_from_lengths(bank_lengths_np[k]).tables()
+            for k in range(bank_lengths_np.shape[0])]
+    sym_flat = np.concatenate([t[0] for t in tabs])
+    len_flat = np.concatenate([t[1] for t in tabs])
+    ko = max(1, int(outl2.sum(axis=1).max()))
+    ko = 1 << (ko - 1).bit_length()
+    odelta2 = np.zeros((C, ko), np.int32)
+    for i in range(C):
+        idx = np.flatnonzero(outl2[i])
+        odelta2[i, :len(idx)] = delta2[i, idx]
+    return q2, (words2, nbits, counts, sym_flat, len_flat, sel, odelta2,
+                np.zeros(C, np.int32), np.zeros(C, np.int32),
+                np.ones(C, np.int32))
+
+
+@jax.jit
+def _stage_patch_inverse(codes2, counts, odelta2, base, seg0, islor):
+    from repro.kernels.megakernel import ref as MR
+    return MR.patch_and_inverse(codes2, counts, odelta2, base, seg0,
+                                islor)
+
+
+def _staged_ceaz_dec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                     odelta2, base, seg0, islor):
+    decode = dispatch.resolve("hufdec", "jnp")
+    codes = decode(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                   BLOCK_SIZE)
+    jax.block_until_ready(codes)
+    return _stage_patch_inverse(codes, counts, odelta2, base, seg0,
+                                islor)
+
+
 def run():
     rng = np.random.default_rng(0)
     backend = jax.default_backend()
@@ -219,9 +272,12 @@ def run():
         need = 2 * ((int(np.asarray(ref_out[7]).max()) + 63) // 64 + 1)
         w32 = -(-need // 128) * 128
         mega_out = {}
+        full_jnp = None
         for impl in dispatch.available("ceaz_chunk"):
             fn = dispatch.resolve("ceaz_chunk", impl)
             out, t = _time(fn, *margs, BLOCK_SIZE, w32, 33, "lorenzo")
+            if impl == "jnp":
+                full_jnp = out
             mega_out[impl] = tuple(np.asarray(a) for a in out[5:])
             rows.append(dict(op="ceaz_chunk", impl=impl, case=case,
                              backend=backend, mb=mb, seconds=t,
@@ -236,6 +292,28 @@ def run():
                 if not np.array_equal(a, b):
                     mismatches.append(("ceaz_chunk", impl, case))
                     break
+
+        # -- ceaz_chunk_dec: decode the batch just encoded above ------
+        q2_want, dargs = _mega_decode_batch(full_jnp, valid2, bl_np)
+        dargs_j = tuple(jnp.asarray(a) for a in dargs)
+        dec_mega = {}
+        for impl in dispatch.available("ceaz_chunk_dec"):
+            fn = dispatch.resolve("ceaz_chunk_dec", impl)
+            out, t = _time(fn, *dargs_j, block_size=BLOCK_SIZE)
+            dec_mega[impl] = np.asarray(out)
+            rows.append(dict(op="ceaz_chunk_dec", impl=impl, case=case,
+                             backend=backend, mb=mb, seconds=t,
+                             throughput_mbs=mb / t))
+        out, t = _time(_staged_ceaz_dec, *dargs_j)
+        dec_mega["staged"] = np.asarray(out)
+        rows.append(dict(op="ceaz_chunk_dec", impl="staged", case=case,
+                         backend=backend, mb=mb, seconds=t,
+                         throughput_mbs=mb / t))
+        # ground truth is the ENCODER's reconstruction codes: every
+        # decode route must reproduce them bit-for-bit
+        for impl, out in dec_mega.items():
+            if not np.array_equal(out[:, :cv], q2_want):
+                mismatches.append(("ceaz_chunk_dec", impl, case))
 
     by = {}
     for r in rows:
@@ -254,8 +332,15 @@ def run():
                 ("ceaz_chunk", auto, "slower than stage-boundary "
                  "baseline", summary[f"ceaz_chunk_{auto}_mbs"],
                  summary["ceaz_chunk_staged_mbs"]))
+        dauto = dispatch.auto_impl("ceaz_chunk_dec")
+        if summary[f"ceaz_chunk_dec_{dauto}_mbs"] < \
+                GATE_MARGIN * summary["ceaz_chunk_dec_staged_mbs"]:
+            gate_failures.append(
+                ("ceaz_chunk_dec", dauto, "slower than stage-boundary "
+                 "baseline", summary[f"ceaz_chunk_dec_{dauto}_mbs"],
+                 summary["ceaz_chunk_dec_staged_mbs"]))
         if backend != "cpu":
-            for op in ("hufenc", "ceaz_chunk"):
+            for op in ("hufenc", "ceaz_chunk", "ceaz_chunk_dec"):
                 if summary.get(f"{op}_pallas_mbs", 0.0) < \
                         GATE_MARGIN * summary[f"{op}_jnp_mbs"]:
                     gate_failures.append(
@@ -266,6 +351,8 @@ def run():
                      auto_hufenc=dispatch.auto_impl("hufenc"),
                      auto_hufdec=dispatch.auto_impl("hufdec"),
                      auto_ceaz_chunk=dispatch.auto_impl("ceaz_chunk"),
+                     auto_ceaz_chunk_dec=dispatch.auto_impl(
+                         "ceaz_chunk_dec"),
                      bit_identical=not mismatches,
                      timing_gate_enforced=timing_gate_enabled(),
                      timing_gate_pass=not gate_failures, **summary))

@@ -164,6 +164,15 @@ class CEAZConfig:
     # 'auto' (per-backend table: jnp on cpu/gpu, pallas on tpu). An
     # unknown name raises ValueError at first compress/decompress.
     kernel_impl: str = "auto"
+    # Decode-side megakernel (kernels/megakernel/decode_kernel.py):
+    # 'auto'/'mega' run eligible fused decodes through `ceaz_chunk_dec`
+    # (Huffman walk + outlier patch + inverse dual-quant as ONE
+    # dispatched pass per group); 'split' forces the three-stage PR 3
+    # path (hufdec walk, then per-array scatter + inverse jits). Both
+    # are bit-identical (tests/test_full_grid.py); 'split' exists as
+    # the differential fence's second oracle and an escape hatch. An
+    # unknown name raises ValueError at first decompress.
+    decode_megakernel: str = "auto"
     # Codebook policy (docs/CODEBOOK_BANK.md): 'exact' keeps the
     # chi-driven adaptive coder (host tree builds between the fused
     # passes); 'bank' selects per chunk from an offline CodebookBank —
@@ -607,13 +616,19 @@ class CEAZ:
                 from ..runtime import fused_decode as FD
                 fused_idx = [i for i, c in enumerate(comps)
                              if FD.fused_decode_ok(c, self.offline)]
+                dmk = self.cfg.decode_megakernel
+                if dmk not in ("auto", "mega", "split"):
+                    raise ValueError(
+                        f"unknown decode_megakernel {dmk!r}; choose "
+                        "from ('auto', 'mega', 'split')")
                 if fused_idx:
                     for i in fused_idx:
                         self._check_block_size(comps[i])
                     dec = FD.decompress_batch(
                         [comps[i] for i in fused_idx],
                         self.cfg.block_size, self.offline,
-                        kernel_impl=self.cfg.kernel_impl, bank=self.bank)
+                        kernel_impl=self.cfg.kernel_impl, bank=self.bank,
+                        megakernel=dmk != "split")
                     for i, a in zip(fused_idx, dec):
                         out[i] = a
             res = [a if a is not None else self._decompress_staged(c)

@@ -662,17 +662,43 @@ class AsyncDecodeReadEngine:
                     f"record {key!r}: bank_delta indexes past the "
                     f"bank's {bank.n_books} books")
 
+    @staticmethod
+    def _tag_record(e: BaseException, rec: Dict) -> BaseException:
+        """Prefix an exception's message with the failing record's seq
+        and key, in place — mutating args (not re-constructing) keeps
+        the exception type AND avoids double-bumping the corruption
+        counter ``StreamCorruptionError.__init__`` increments."""
+        where = f"record seq={rec.get('seq', '?')} key={rec.get('key', '?')!r}"
+        e.args = ((f"{where}: {e.args[0]}" if e.args else where,)
+                  + tuple(e.args[1:]))
+        return e
+
     def _decode_group(self, batch: List[tuple]) -> List[tuple]:
         from ..core.ceaz import CEAZCompressed
         idx = [i for i, (_, obj) in enumerate(batch)
                if isinstance(obj, CEAZCompressed)]
         for i in idx:
-            self._check_bank_record(batch[i][0], batch[i][1])
+            try:
+                self._check_bank_record(batch[i][0], batch[i][1])
+            except StreamCorruptionError as e:
+                raise self._tag_record(e, batch[i][0])
         if idx:
             t0 = time.perf_counter()
             with ot.span("reader.decode_group", n=len(idx)):
-                dec = self._comp.decompress_batch(
-                    [batch[i][1] for i in idx])
+                try:
+                    dec = self._comp.decompress_batch(
+                        [batch[i][1] for i in idx])
+                except Exception as group_err:
+                    # the batched pass loses which record failed —
+                    # localize by replaying one record at a time and
+                    # re-raise the per-record failure with its seq
+                    for i in idx:
+                        try:
+                            self._comp.decompress_batch([batch[i][1]])
+                        except Exception as e:
+                            raise self._tag_record(
+                                e, batch[i][0]) from group_err
+                    raise
             self.stats.add("decode_s", time.perf_counter() - t0)
             for i, arr in zip(idx, dec):
                 batch[i] = (batch[i][0], arr)

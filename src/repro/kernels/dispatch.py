@@ -47,6 +47,19 @@ Op calling conventions (all array args jax-compatible):
          jnp twin composed from the stage ops ('jnp'). valid2 rows must
          be prefix masks. See kernels/megakernel/ref.py for the full
          contract.
+  ceaz_chunk_dec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+         odelta2, base, seg0, islor, block_size)
+      -> q (C, NB*block_size) i32
+         The decode megakernel: canonical-Huffman table walk, rank-
+         gather outlier patch (code 0 is the escape symbol; deltas are
+         stored in ascending position order) and inverse dual-quant
+         (segmented Lorenzo prefix sum OR value-direct centre add,
+         selected per row by `islor`) as ONE program per chunk
+         ('pallas'; word-tiled walk + shared jnp tail past the
+         per-program VMEM limit), or the jnp twin composed from the
+         hufdec walk + patch/inverse tail ('jnp'). Lorenzo segments
+         (`seg0`) must be contiguous ascending row runs. See
+         kernels/megakernel/ref.py for the full contract.
 """
 from __future__ import annotations
 
@@ -238,6 +251,16 @@ def _ceaz_chunk_pallas() -> Callable:
     return ops.ceaz_chunk
 
 
+def _ceaz_chunk_dec_jnp() -> Callable:
+    from .megakernel import ref
+    return ref.ceaz_chunk_dec
+
+
+def _ceaz_chunk_dec_pallas() -> Callable:
+    from .megakernel import ops
+    return ops.ceaz_chunk_dec
+
+
 # auto policy: on CPU and GPU the XLA-compiled jnp path wins (a Pallas
 # kernel would run interpreted there); on TPU the explicit VMEM-resident
 # kernels are the point. GPU-specialized variants (Mosaic-GPU / Triton)
@@ -250,3 +273,7 @@ register("dq_center", "jnp", _dq_center_jnp, auto_for=("cpu", "gpu"))
 register("dq_center", "pallas", _dq_center_pallas, auto_for=("tpu",))
 register("ceaz_chunk", "jnp", _ceaz_chunk_jnp, auto_for=("cpu", "gpu"))
 register("ceaz_chunk", "pallas", _ceaz_chunk_pallas, auto_for=("tpu",))
+register("ceaz_chunk_dec", "jnp", _ceaz_chunk_dec_jnp,
+         auto_for=("cpu", "gpu"))
+register("ceaz_chunk_dec", "pallas", _ceaz_chunk_dec_pallas,
+         auto_for=("tpu",))

@@ -1,15 +1,19 @@
-"""Public wrapper for the `ceaz_chunk` megakernel op ('pallas' impl).
+"""Public wrappers for the megakernel ops ('pallas' impls).
 
-Two regimes behind one signature (both bit-identical to ref.ceaz_chunk):
+`ceaz_chunk` (encode) and `ceaz_chunk_dec` (decode) each run two
+regimes behind one signature (both bit-identical to their ref twins):
 
-  * cv <= kernel._FUSE_ROW_LIMIT — ONE fused Pallas program per chunk
-    (kernel.ceaz_chunk_fused): no intermediate leaves VMEM.
-  * larger chunks — the word-tiled composition: tiled quantize+histogram
-    kernels (bounded TILE_SEG windows, halo BlockSpecs), the
-    radix-select `dq_center` kernel for value-direct centring, a tiny
-    jnp bank-select on the (C, 1024) histograms, and the shared
-    kernels/hufenc word-tiled gather-pack. Codes cross HBM exactly once
-    here — physically necessary once a chunk row outgrows VMEM.
+  * rows <= the per-program VMEM limit — ONE fused Pallas program per
+    chunk (kernel.ceaz_chunk_fused / decode_kernel.ceaz_chunk_dec_fused):
+    no intermediate leaves VMEM.
+  * larger chunks — the word-tiled composition. Encode: tiled
+    quantize+histogram kernels (bounded TILE_SEG windows, halo
+    BlockSpecs), the radix-select `dq_center` kernel, a tiny jnp
+    bank-select, and the shared kernels/hufenc word-tiled gather-pack.
+    Decode: the word-tiled walk (decode_kernel.hufdec_tiles) + the
+    shared jnp `ref.patch_and_inverse` tail. Codes cross HBM exactly
+    once in either direction — physically necessary once a chunk row
+    outgrows VMEM.
 
 ``interpret=None`` resolves per backend (compiled on TPU, interpreter
 everywhere else so CI exercises both regimes on CPU).
@@ -25,6 +29,7 @@ import jax.numpy as jnp
 from ..dispatch import default_interpret
 from ..dualquant import ops as dq_ops
 from ..hufenc import kernel as hufenc_k
+from . import decode_kernel as DK
 from . import kernel as K
 from . import ref as R
 
@@ -100,3 +105,36 @@ def ceaz_chunk(work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
      nbits) = out
     return (q2, codes2, outl2.astype(bool), delta2, centers, hists, sel,
             totals, words, nbits)
+
+
+def ceaz_chunk_dec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                   odelta2, base, seg0, islor, block_size: int, *,
+                   interpret: Optional[bool] = None):
+    """Same signature and bit-exact output as ``ref.ceaz_chunk_dec``.
+
+    The flat stacked decode tables widen to (K, 2^16) int32 rows so the
+    layout respects f32-class tiling (the kernels/hufdec convention);
+    row counts past `decode_kernel._DEC_FUSE_LIMIT` switch to the
+    word-tiled walk + the shared jnp patch/inverse tail.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    words2 = jnp.asarray(words2, jnp.uint32)
+    nbits2 = jnp.asarray(nbits2, jnp.int32)
+    counts = jnp.asarray(counts, jnp.int32)
+    cb_idx = jnp.asarray(cb_idx, jnp.int32)
+    odelta2 = jnp.asarray(odelta2, jnp.int32)
+    base = jnp.asarray(base, jnp.int32)
+    seg0 = jnp.asarray(seg0, jnp.int32)
+    islor = jnp.asarray(islor, jnp.int32)
+    sym2 = jnp.asarray(sym_flat).reshape(-1, DK.TBL).astype(jnp.int32)
+    len2 = jnp.asarray(len_flat).reshape(-1, DK.TBL).astype(jnp.int32)
+    if nbits2.shape[1] * block_size <= DK._DEC_FUSE_LIMIT:
+        return DK.ceaz_chunk_dec_fused(
+            words2, nbits2, counts, sym2, len2, cb_idx, odelta2, base,
+            seg0, islor, block_size=block_size,
+            interpret=bool(interpret))
+    codes = DK.hufdec_tiles(words2, nbits2, counts, sym2, len2, cb_idx,
+                            block_size=block_size,
+                            interpret=bool(interpret))
+    return R.patch_and_inverse(codes, counts, odelta2, base, seg0, islor)

@@ -1,4 +1,4 @@
-"""jnp reference for the `ceaz_chunk` megakernel op.
+"""jnp references for the `ceaz_chunk` / `ceaz_chunk_dec` megakernel ops.
 
 Composed from the EXISTING stage implementations — core.dualquant for
 the quantizers, the dualquant `chunk_center` reduction, the histogram
@@ -6,6 +6,10 @@ scatter-add and the hufenc gather-pack reference — so its outputs are
 bitwise-identical to the staged fused pipeline (runtime/fused.py's
 `_bank_pass_fn` core) by construction, and serve as the bit-identity
 fence for the Pallas megakernel.
+
+The decode twin (`ceaz_chunk_dec`, bottom of this module) composes the
+hufdec lockstep walk with `patch_and_inverse`, the shared outlier-patch
++ inverse-dual-quant tail the word-tiled Pallas regime also uses.
 
 Op contract (`ceaz_chunk`):
 
@@ -46,6 +50,7 @@ import jax.numpy as jnp
 
 from ...core import dualquant as core_dq
 from ..dualquant import ops as dq_ops
+from ..hufdec import ref as hufdec_ref
 from ..hufenc import ref as hufenc_ref
 
 NUM_SYMBOLS = core_dq.NUM_SYMBOLS
@@ -113,3 +118,84 @@ def ceaz_chunk(work2, prev2, valid2, ebs, bank_lengths, bank_cwords,
         block_size, w32, cands)
     return (q2, codes2, outl2, delta2, centers, hists, sel, totals,
             words, block_nbits)
+
+
+# ---------------------------------------------------------------------------
+# Decode twin: ceaz_chunk_dec
+# ---------------------------------------------------------------------------
+#
+# Op contract (`ceaz_chunk_dec`):
+#
+#     ceaz_chunk_dec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+#                    odelta2, base, seg0, islor, block_size)
+#       -> q2 (C, NB*block_size) i32
+#
+#   words2  (C, W)  u32   wire bitstream (u64 words split MSB-first)
+#   nbits2  (C, NB) i32   per-block bit counts (zero-padded)
+#   counts  (C,)    i32   valid symbols per chunk row
+#   sym/len_flat (K*2^16,) stacked decode tables; cb_idx (C,) selects
+#   odelta2 (C, Ko) i32   the row's outlier deltas IN ASCENDING POSITION
+#                         ORDER (the encoder's flatnonzero order),
+#                         zero-padded
+#   base    (C,)    i32   additive base: the value-direct centre code,
+#                         0 for Lorenzo / delta-passthrough rows
+#   seg0    (C,)    i32   index of the first row of the row's Lorenzo
+#                         carry segment (seg0[c] == c: no carry-in);
+#                         rows of one segment must be contiguous and
+#                         ascending in the batch
+#   islor   (C,)    i32   1: inverse-Lorenzo rows (segmented prefix
+#                         sum); 0: value/delta rows (q = delta + base)
+#
+# The outlier patch needs no index array: the dual-quantizer's escape
+# symbol IS code 0 (core.dualquant.postquantize maps exactly the
+# outliers there — every in-range code lands in [1, 1023]), and the
+# encoder stores outlier deltas in ascending position order, so the
+# r-th zero-code in a row's valid prefix pairs with odelta2[r] by an
+# exclusive prefix count — a rank gather, no scatter.
+#
+# The per-row arithmetic is int32 WRAP throughout, matching the staged
+# inverse exactly: a Lorenzo segment's carry is the difference of two
+# wrapped prefix sums, which is exact mod 2^32.
+
+
+@jax.jit
+def patch_and_inverse(codes2, counts, odelta2, base, seg0, islor):
+    """codes -> reconstruction codes q, one pass over (C, N) rows.
+
+    Shared by the jnp twin below and the word-tiled Pallas regime
+    (megakernel/ops.py): past the one-program ceiling the decoded codes
+    cross HBM once and this tail runs as ONE jitted pass.
+    """
+    codes2 = codes2.astype(jnp.int32)
+    C, N = codes2.shape
+    Ko = odelta2.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (C, N), 1)
+    valid = pos < counts.astype(jnp.int32)[:, None]
+    is_out = valid & (codes2 == 0)
+    io32 = is_out.astype(jnp.int32)
+    rank = jnp.cumsum(io32, axis=1) - io32         # exclusive zero-count
+    dval = jnp.take_along_axis(odelta2.astype(jnp.int32),
+                               jnp.clip(rank, 0, Ko - 1), axis=1)
+    delta = jnp.where(is_out, dval, codes2 - RADIUS)
+    delta = jnp.where(valid, delta, 0)
+    local = jnp.cumsum(delta, axis=1, dtype=jnp.int32)
+    dsum = local[:, -1]
+    carry_all = jnp.cumsum(dsum, dtype=jnp.int32) - dsum     # exclusive
+    carry = carry_all - carry_all[seg0.astype(jnp.int32)]
+    q_lor = local + carry[:, None]
+    q_val = delta + base.astype(jnp.int32)[:, None]
+    q = jnp.where(islor.astype(bool)[:, None], q_lor, q_val)
+    return jnp.where(valid, q, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def ceaz_chunk_dec(words2, nbits2, counts, sym_flat, len_flat, cb_idx,
+                   odelta2, base, seg0, islor, block_size: int):
+    """The `ceaz_chunk_dec` dispatch op's 'jnp' implementation: the
+    hufdec lockstep table walk composed with the shared patch/inverse
+    tail — bitwise-identical to the staged decode chain by
+    construction, and the oracle the Pallas decode megakernel's
+    bit-identity sweeps compare against."""
+    codes = hufdec_ref.decode_blocks(words2, nbits2, counts, sym_flat,
+                                     len_flat, cb_idx, block_size)
+    return patch_and_inverse(codes, counts, odelta2, base, seg0, islor)

@@ -22,6 +22,15 @@ batched passes:
             memory bandwidth. Everything bit-width-heavy (table walk,
             scatter, prefix sums) never touches host numpy.
 
+Since PR 9 the default route collapses passes 1+2 into the
+`ceaz_chunk_dec` decode megakernel (kernels/megakernel): walk, outlier
+patch and inverse dual-quant in ONE dispatched pass over the whole
+group — one kernel launch per group instead of three stages — with the
+split path above retained behind ``CEAZConfig(decode_megakernel=
+'split')`` and as the differential fence's second oracle. Higher-rank
+abs/rel fields take their multi-axis cumsum in a follow-up jit
+(``_nd_cumsum``); the host finish is unchanged.
+
 Bit-exactness contract: for float32 Lorenzo streams the output is
 BIT-IDENTICAL to the staged reference in every mode (abs/rel/
 fixed_ratio) — enforced by tests/test_fused_decode.py. The device walk
@@ -146,7 +155,17 @@ def fused_decode_ok(c, offline: Codebook) -> bool:
 
 
 class _ChunkBatch:
-    """Host staging of one group's chunks for the batched decode pass."""
+    """Host staging of one group's chunks for the batched decode pass.
+
+    Two run modes share the staging:
+
+    * ``run()`` — the hufdec table walk alone (the PR 3 split path);
+      pass 2 + host finish follow per array in ``decompress_one``.
+    * ``run_mega()`` — the `ceaz_chunk_dec` decode megakernel: walk,
+      rank-gather outlier patch and inverse dual-quant in ONE
+      dispatched pass over the whole group; only the float64 scale
+      multiply + literal patch remain (``decompress_one_mega``).
+    """
 
     def __init__(self, block_size: int, kernel_impl: str = "auto"):
         self.block_size = block_size
@@ -156,19 +175,40 @@ class _ChunkBatch:
         self.counts: List[int] = []
         self.books: List[Codebook] = []
         self.spans: List[Tuple[int, int]] = []     # comp -> row range
+        # per-row megakernel metadata (see kernels/megakernel/ref.py):
+        # outlier deltas (ascending position order), value-direct centre
+        # base, Lorenzo-row flag, carry-segment head row
+        self.odelta: List[np.ndarray] = []
+        self.base: List[int] = []
+        self.islor: List[int] = []
+        self.seg0: List[int] = []
 
     def add_comp(self, c, offline: Codebook, bank=None):
         row0 = len(self.counts)
-        for ch, book in zip(c.chunks,
-                            replay_codebooks(c.chunks, offline, bank=bank)):
+        value = getattr(c, "predictor", "lorenzo") == "none"
+        # one flat Lorenzo chain across the comp's rows (the encoder's
+        # single whole-array pass) only when the work shape IS flat;
+        # higher-rank fields decode per-row deltas here and run the
+        # multi-axis cumsum in decompress_one_mega
+        chained = (not value and c.mode in ("abs", "rel")
+                   and len(c.shape) == 1)
+        lor1d = not value and (c.mode == "fixed_ratio" or chained)
+        for j, (ch, book) in enumerate(
+                zip(c.chunks,
+                    replay_codebooks(c.chunks, offline, bank=bank))):
             self.words.append(_u64_to_u32(ch.words))
             self.nbits.append(np.asarray(ch.block_nbits, np.int64))
             self.counts.append(int(ch.n_values))
             self.books.append(book)
+            self.odelta.append(ch.outlier_delta)
+            self.base.append(int(ch.center) if value else 0)
+            self.islor.append(1 if lor1d else 0)
+            self.seg0.append(row0 if chained else row0 + j)
         self.spans.append((row0, len(self.counts)))
 
-    def run(self):
-        """-> device codes (C_cap, NB_cap*block_size) uint16 (padded)."""
+    def _stage(self):
+        """Pad the staged chunks to capacity buckets and stack the
+        unique decode tables (shared by both run modes)."""
         C = len(self.counts)
         c_cap = _bucket_pow2(C)
         nb_cap = _bucket_pow2(max(len(b) for b in self.nbits))
@@ -197,14 +237,44 @@ class _ChunkBatch:
         while len(tables_sym) < k_cap:
             tables_sym.append(np.zeros(_TBL, np.uint16))
             tables_len.append(np.zeros(_TBL, np.uint8))
-        sym_flat = np.concatenate(tables_sym)
-        len_flat = np.concatenate(tables_len)
+        return (words2, nbits2, counts, np.concatenate(tables_sym),
+                np.concatenate(tables_len), cb_idx)
+
+    def run(self):
+        """-> device codes (C_cap, NB_cap*block_size) uint16 (padded)."""
+        words2, nbits2, counts, sym_flat, len_flat, cb_idx = self._stage()
         decode_blocks = dispatch.resolve("hufdec", self.kernel_impl)
         with dispatch.measure("hufdec", self.kernel_impl) as m:
             return m.done(decode_blocks(
                 jnp.asarray(words2), jnp.asarray(nbits2),
                 jnp.asarray(counts), jnp.asarray(sym_flat),
                 jnp.asarray(len_flat), jnp.asarray(cb_idx),
+                self.block_size))
+
+    def run_mega(self):
+        """-> device q (C_cap, NB_cap*block_size) int32 (padded): the
+        `ceaz_chunk_dec` megakernel over the whole group."""
+        words2, nbits2, counts, sym_flat, len_flat, cb_idx = self._stage()
+        c_cap = len(counts)
+        C = len(self.counts)
+        k = _bucket_pow2(max(1, max(len(d) for d in self.odelta)))
+        odelta2 = np.zeros((c_cap, k), np.int32)
+        for i, d in enumerate(self.odelta):
+            odelta2[i, :len(d)] = d.astype(np.int32)
+        base = np.zeros(c_cap, np.int32)
+        base[:C] = np.asarray(self.base, np.int64).astype(np.int32)
+        islor = np.zeros(c_cap, np.int32)
+        islor[:C] = self.islor
+        seg0 = np.arange(c_cap, dtype=np.int32)    # padding: own segment
+        seg0[:C] = self.seg0
+        fn = dispatch.resolve("ceaz_chunk_dec", self.kernel_impl)
+        with dispatch.measure("ceaz_chunk_dec", self.kernel_impl) as m:
+            return m.done(fn(
+                jnp.asarray(words2), jnp.asarray(nbits2),
+                jnp.asarray(counts), jnp.asarray(sym_flat),
+                jnp.asarray(len_flat), jnp.asarray(cb_idx),
+                jnp.asarray(odelta2), jnp.asarray(base),
+                jnp.asarray(seg0), jnp.asarray(islor),
                 self.block_size))
 
 
@@ -267,26 +337,69 @@ def decompress_one(codes_rows, c) -> np.ndarray:
     return _finish_host(c, np.concatenate(parts), ebs)
 
 
+@functools.partial(jax.jit, static_argnames=("ndim", "n", "work_shape"))
+def _nd_cumsum(delta2, ndim, n, work_shape):
+    """Multi-axis inverse-Lorenzo for megakernel delta-passthrough rows
+    (higher-rank abs/rel fields) — the `_inverse_nd` cumsum alone, the
+    patch already applied in-kernel."""
+    q = delta2.reshape(-1)[:n].reshape(work_shape)
+    for ax in range(ndim):
+        q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
+    return q.reshape(-1)
+
+
+def decompress_one_mega(q_rows, c) -> np.ndarray:
+    """Host finish for one array, given its megakernel-reconstructed q
+    rows (outliers patched and 1-D inverses already applied in-kernel;
+    higher-rank abs/rel rows arrive as deltas and take the multi-axis
+    cumsum here)."""
+    cv = int(c.chunks[0].n_values)
+    n = int(c.n_values)
+    rows = q_rows[:, :cv]
+    if (getattr(c, "predictor", "lorenzo") == "none"
+            or c.mode == "fixed_ratio"):
+        # per-chunk rows are final q; per-chunk eb
+        q2 = np.asarray(rows)
+        parts = [q2[i, :ch.n_values] for i, ch in enumerate(c.chunks)]
+        ebs = np.repeat([2.0 * ch.eb for ch in c.chunks],
+                        [ch.n_values for ch in c.chunks])
+        return _finish_host(c, np.concatenate(parts), ebs)
+    if len(c.shape) == 1:
+        # flat Lorenzo chain: the kernel's segment carry already crossed
+        # the chunk boundaries
+        q = np.asarray(rows).reshape(-1)[:n]
+    else:
+        q = np.asarray(_nd_cumsum(rows, c.ndim, n, _work_shape(c)))
+    return _finish_host(c, q, np.float64(2.0 * c.chunks[0].eb))
+
+
 def decompress_batch(comps: Sequence, block_size: int,
                      offline: Codebook,
                      kernel_impl: str = "auto",
-                     bank=None) -> List[np.ndarray]:
+                     bank=None, megakernel: bool = False) -> List[np.ndarray]:
     """Fused decode of a group of CEAZCompressed streams.
 
-    All chunks of all arrays share ONE batched Huffman-decode pass
-    (`kernel_impl` selects its implementation through the dispatch
-    registry); the inverse-quant pass then runs per array (its cumsum
-    rank and shape are array-specific). Bank-mode chunks resolve their
-    codebooks through `bank` / the process bank registry (see
+    All chunks of all arrays share ONE batched device pass: with
+    `megakernel` the `ceaz_chunk_dec` decode megakernel (walk + outlier
+    patch + inverse dual-quant in one kernel residency), otherwise the
+    split PR 3 path (hufdec walk, then per-array scatter + inverse
+    jits). `kernel_impl` selects the pass implementation through the
+    dispatch registry. Bank-mode chunks resolve their codebooks through
+    `bank` / the process bank registry (see
     ``core.huffman.replay_codebooks``). Callers must pre-filter
     eligibility with ``fused_decode_ok`` — the ``CEAZ.decompress_batch``
-    facade does.
+    facade does. Both paths are bit-identical on everything
+    ``fused_decode_ok`` admits (tests/test_full_grid.py).
     """
     batch = _ChunkBatch(block_size, kernel_impl)
     for c in comps:
         batch.add_comp(c, offline, bank=bank)
     if not batch.counts:
         return []
+    if megakernel:
+        q_all = batch.run_mega()
+        return [decompress_one_mega(q_all[r0:r1], c)
+                for c, (r0, r1) in zip(comps, batch.spans)]
     codes_all = batch.run()
     out = []
     for c, (r0, r1) in zip(comps, batch.spans):

@@ -285,7 +285,9 @@ def test_fuzz_mismatched_bank_delta_is_corruption(tmp_path):
         d = f["records"][0]["bank_delta"]
         d[0] = (int(d[0]) + 1) % BANK.n_books
     _rewrite_footer(path, flip_delta)
-    with pytest.raises(E.StreamCorruptionError, match="bank_delta"):
+    # the error names the failing record (seq attribution, PR 9)
+    with pytest.raises(E.StreamCorruptionError,
+                       match=r"record seq=0 .*bank_delta"):
         E.read_stream_arrays(path)
 
 

@@ -127,6 +127,90 @@ def test_last_chunk_shorter_than_block(mode, kw, tail):
     assert len(cs.chunks[-1].block_nbits) == 1
 
 
+# -- decode megakernel edges (PR 9) ------------------------------------------
+# `_check_pair` above already routes fused decode through the megakernel
+# (decode_megakernel defaults to 'auto'); this section pins the mega
+# route against BOTH oracles — the staged decoder and the PR 3 split
+# fused decode — exactly at the megakernel's own seams: degenerate
+# chunk grains, word-tile boundaries of the tiled walk regime, and
+# all-outlier chunks where every code is the escape symbol.
+
+def _check_decode_edges(x, kernel_impl="jnp", **kw):
+    """One stream, three decode routes, byte-equal outputs."""
+    staged, fused = _pair(kernel_impl=kernel_impl, **kw)
+    c = fused.compress(x)
+    want = staged._decompress_staged(c)
+    for dmk in ("split", "mega"):
+        comp = CEAZ(CEAZConfig(backend="jax", use_fused=True,
+                               kernel_impl=kernel_impl,
+                               decode_megakernel=dmk, **kw),
+                    offline_codebook=OFFLINE)
+        got = comp.decompress(c)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        assert np.array_equal(want, got, equal_nan=True), dmk
+    return c, want
+
+
+@pytest.mark.parametrize("kernel_impl", ["jnp", "pallas"])
+def test_decode_megakernel_degenerate_grains(kernel_impl):
+    """Empty streams, a single-value stream and size-1 chunks
+    (chunk_bytes=4, block_size=1: one value per program) through every
+    decode route."""
+    rng = np.random.default_rng(3)
+    for shape in [(0,), (0, 7)]:
+        _check_decode_edges(np.zeros(shape, np.float32),
+                            kernel_impl=kernel_impl, mode="rel", eb=1e-4)
+    _check_decode_edges(np.asarray([1.25], np.float32),
+                        kernel_impl=kernel_impl, mode="rel", eb=1e-4)
+    x = np.cumsum(rng.standard_normal(17)).astype(np.float32)
+    c, _ = _check_decode_edges(x, kernel_impl=kernel_impl, mode="abs",
+                               eb=1e-3, chunk_bytes=4, block_size=1)
+    assert all(ch.n_values == 1 for ch in c.chunks)
+
+
+def test_decode_megakernel_tails_at_word_tile_boundaries():
+    """Chunks past the one-program limit (2^18 values) decode through
+    the word-tiled walk; sweep the ragged tail across a tile seam of
+    the tiled grid — one short of a full tile, exactly full, one value
+    into a fresh tile, and a lone value."""
+    from repro.kernels.megakernel import decode_kernel as DK
+    rng = np.random.default_rng(8)
+    cv = 1 << 18
+    bs = 512
+    assert cv > DK._DEC_FUSE_LIMIT
+    tile = (DK._DEC_TILE_VALUES // bs) * bs      # values per walk tile
+    for tail in (tile - 1, tile, tile + 1, 1):
+        x = np.cumsum(rng.standard_normal(cv + tail)).astype(np.float32)
+        c, _ = _check_decode_edges(x, mode="abs", eb=1e-3,
+                                   chunk_bytes=4 * cv, block_size=bs)
+        assert c.chunks[0].n_values == cv and c.chunks[-1].n_values == tail
+    # the same seam through the Pallas tiled kernel (interpret on CPU)
+    x = np.cumsum(rng.standard_normal(cv + tile + 1)).astype(np.float32)
+    _check_decode_edges(x, kernel_impl="pallas", mode="abs", eb=1e-3,
+                        chunk_bytes=4 * cv, block_size=bs)
+
+
+@pytest.mark.parametrize("kernel_impl", ["jnp", "pallas"])
+@pytest.mark.parametrize("predictor", ["lorenzo", "none"])
+def test_decode_megakernel_all_outlier_chunks(predictor, kernel_impl):
+    """Every quantized delta escapes the code range (code 0 for all
+    values): the rank-gather patch must reconstruct the whole chunk
+    from the outlier channel alone, on both inverse forms."""
+    n = 3000
+    if predictor == "lorenzo":
+        x = (np.arange(n) * 5.0).astype(np.float32)   # step >> 2*eb*511
+    else:
+        rng = np.random.default_rng(2)
+        x = (rng.standard_normal(n) * 1e4).astype(np.float32)
+    c, _ = _check_decode_edges(x, kernel_impl=kernel_impl, mode="abs",
+                               eb=1e-3, predictor=predictor,
+                               chunk_bytes=1 << 12, block_size=512)
+    # everything escapes except the handful of values that anchor the
+    # predictor itself (the stream head / the centre code)
+    assert sum(len(ch.outlier_idx) for ch in c.chunks) >= c.n_values - 2
+    assert any(len(ch.outlier_idx) == ch.n_values for ch in c.chunks)
+
+
 # -- adversarial speculation workload ---------------------------------------
 
 def test_speculation_miss_every_chunk_monotone_ramp():

@@ -2,6 +2,7 @@
 accounting, backpressure, and crash-safety of the stream format
 (truncated file, corrupted footer, corrupted payload, out-of-order
 shard commit must all fail loudly on read — never silent garbage)."""
+import json
 import os
 import struct
 import threading
@@ -495,6 +496,153 @@ def test_fuzz_truncation_at_every_section_boundary(tmp_path):
     back = E.read_stream_arrays(path)
     for a, b in zip(back, shards):
         assert np.abs(a - b).max() <= 1e-4 * (b.max() - b.min())
+
+
+# -- decode differential-fuzz fence: staged / fused / megakernel agree -------
+#
+# PR 9 adds a third decode route (the ceaz_chunk_dec megakernel). A
+# corrupted stream must be judged IDENTICALLY by all three — the fence
+# that keeps a route from silently decoding garbage the others reject.
+
+_CORPUS = os.path.join(os.path.dirname(__file__), "corpus",
+                       "decode_fuzz_corpus.json")
+
+
+def _decode_impl_comps():
+    """The three decode routes every corrupted stream must judge
+    identically: staged (per-chunk host loop), fused split (the PR 3
+    stage-boundary ops) and the PR 9 decode megakernel."""
+    base = dict(mode="rel", eb=1e-4, adaptive=False, chunk_bytes=1 << 13)
+    return [
+        ("staged", CEAZ(CEAZConfig(use_fused=False, **base))),
+        ("split", CEAZ(CEAZConfig(use_fused=True,
+                                  decode_megakernel="split", **base))),
+        ("mega", CEAZ(CEAZConfig(use_fused=True,
+                                 decode_megakernel="mega", **base))),
+    ]
+
+
+def _decode_verdicts(path):
+    """(impl, 'ok'|'corrupt', decoded-bytes) per decode route. Anything
+    other than a clean decode or StreamCorruptionError escapes — a
+    route crashing differently than the others IS a fence failure."""
+    out = []
+    for name, comp in _decode_impl_comps():
+        try:
+            arrs = E.read_stream_arrays(path, comp, sync=True)
+            out.append((name, "ok", tuple(a.tobytes() for a in arrs)))
+        except E.StreamCorruptionError:
+            out.append((name, "corrupt", None))
+    return out
+
+
+def _apply_corpus_case(data, records, case):
+    """One corpus entry -> mutated stream bytes (record-relative offsets
+    keep the corpus valid across encoder byte-layout drift)."""
+    rec = records[case["record"] % len(records)]
+    body = rec["offset"] + E.RECORD_HEADER.size
+    if case["kind"] == "bitflip":
+        mut = bytearray(data)
+        mut[body + case["rel_off"] % rec["nbytes"]] ^= 1 << (case["bit"] & 7)
+        return bytes(mut)
+    assert case["kind"] == "truncate"
+    cut = {"after_header": body,
+           "mid_payload": body + rec["nbytes"] // 2,
+           "after_payload": body + rec["nbytes"]}[case["at"]]
+    return data[:cut]
+
+
+def test_decode_differential_fuzz_fence(tmp_path):
+    """Seed corpus + derandomized random flips: every mutation must get
+    the SAME verdict ('corrupt', here — payload CRCs catch all of these)
+    from staged, fused-split and megakernel decode, and the pristine
+    stream must decode byte-identically through all three."""
+    path, shards, comp = _ceaz_stream(tmp_path)
+    with E.StreamReader(path) as r:
+        records = list(r.records)
+    data = open(path, "rb").read()
+
+    clean = _decode_verdicts(path)
+    assert all(v == "ok" for _, v, _ in clean), clean
+    assert len({b for _, _, b in clean}) == 1          # byte-identical
+
+    corpus = json.load(open(_CORPUS))
+    cases = list(corpus["cases"])
+    rng = np.random.default_rng(corpus["random"]["seed"])
+    for _ in range(corpus["random"]["n_bitflips"]):
+        cases.append({"kind": "bitflip",
+                      "record": int(rng.integers(len(records))),
+                      "rel_off": int(rng.integers(1 << 16)),
+                      "bit": int(rng.integers(8))})
+    for case in cases:
+        open(path, "wb").write(_apply_corpus_case(data, records, case))
+        verdicts = _decode_verdicts(path)
+        assert len({(v, b) for _, v, b in verdicts}) == 1, (case, verdicts)
+        assert verdicts[0][1] == "corrupt", (case, verdicts)
+    open(path, "wb").write(data)               # restore: reads clean again
+    assert len(E.read_stream_arrays(path)) == len(shards)
+
+
+def test_megakernel_decode_terminates_on_garbage_bits():
+    """The megakernel walk is a fori bounded by min(count, block_size)
+    with every cursor clamped into the words window — fully random
+    words/tables/nbits (including zero-length table entries that never
+    advance the cursor) must return a well-shaped array in finite time
+    from BOTH the jnp twin and the Pallas interpreter, in both the fused
+    and word-tiled regimes. Decoded values on garbage are unspecified
+    (stream CRCs reject corrupted payloads before decode runs)."""
+    from repro.kernels.megakernel import decode_kernel as DK
+    from repro.kernels.megakernel import ops as MO
+    from repro.kernels.megakernel import ref as MR
+    g = json.load(open(_CORPUS))["garbage"]
+    rng = np.random.default_rng(g["seed"])
+    shapes = [(int(rng.integers(1, 4)), int(rng.integers(1, 7)), 32)
+              for _ in range(g["cases"])]
+    shapes.append((1, DK._DEC_FUSE_LIMIT // 256 + 8, 256))  # tiled regime
+    for C, NB, bs in shapes:
+        W = int(rng.integers(3, 24))
+        args = (rng.integers(0, 1 << 32, size=(C, W), dtype=np.uint32),
+                rng.integers(0, 1 << 12, size=(C, NB)).astype(np.int32),
+                rng.integers(0, NB * bs + 1, size=C).astype(np.int32),
+                rng.integers(0, 1024, size=(1 << 16,)).astype(np.uint16),
+                rng.integers(0, 17, size=(1 << 16,)).astype(np.uint8),
+                np.zeros(C, np.int32),
+                rng.integers(-999, 999, size=(C, 4)).astype(np.int32),
+                rng.integers(-5, 6, size=C).astype(np.int32),
+                np.zeros(C, np.int32),
+                rng.integers(0, 2, size=C).astype(np.int32))
+        for q in (np.asarray(MR.ceaz_chunk_dec(*args, block_size=bs)),
+                  np.asarray(MO.ceaz_chunk_dec(*args, block_size=bs,
+                                               interpret=True))):
+            assert q.shape == (C, NB * bs)
+            assert q.dtype == np.int32
+
+
+def test_group_decode_failure_names_the_record(tmp_path):
+    """Satellite regression: a failure inside the batched decode pass
+    must name WHICH record failed — the engine replays the group one
+    record at a time and re-raises tagged with `record seq=...` (the
+    original exception type intact, the group error chained)."""
+    path = str(tmp_path / "named.ceazs")
+    rng = np.random.default_rng(7)
+    shards = [np.cumsum(rng.standard_normal(n)).astype(np.float32)
+              for n in (5000, 7777, 6000)]
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True))
+    E.write_stream(path, shards, comp, fsync=False)
+
+    class PoisonedComp:
+        """Stands in for a payload that deserializes fine but explodes
+        in the device pass: the batched call fails opaquely; only the
+        per-record replay can pinpoint the 7777-value record."""
+
+        def decompress_batch(self, objs):
+            if any(int(o.n_values) == 7777 for o in objs):
+                raise ValueError("device pass exploded")
+            return comp.decompress_batch(objs)
+
+    with pytest.raises(ValueError, match=r"record seq=1\b") as ei:
+        E.read_stream_arrays(path, PoisonedComp(), group=8, sync=True)
+    assert ei.value.__cause__ is not None      # group failure chained
 
 
 # -- telemetry satellites: wall_s terminal-state + footer forward-compat -----

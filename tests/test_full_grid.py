@@ -210,6 +210,63 @@ def test_bank_megakernel_past_program_limit():
                       "lorenzo", "jnp", chunk_bytes=4 * cv)
 
 
+# -- decode megakernel column -------------------------------------------------
+# PR 9: the read side has three routes — staged (the oracle), fused
+# 'split' (the PR 3 stage-boundary ops) and the ceaz_chunk_dec
+# megakernel (jnp twin / Pallas interpret). Every grid cell must decode
+# to the SAME BYTES through all of them, from the same stream.
+
+DECODE_ROUTES = [("jnp", "split"), ("jnp", "mega"), ("pallas", "mega")]
+
+
+def _check_decode_routes(x, mode, kw, predictor, want, c):
+    for kernel_impl, dmk in DECODE_ROUTES:
+        comp = CEAZ(CEAZConfig(mode=mode, predictor=predictor,
+                               chunk_bytes=1 << 14, block_size=1024,
+                               backend="jax", use_fused=True,
+                               kernel_impl=kernel_impl,
+                               decode_megakernel=dmk, **kw),
+                    offline_codebook=OFFLINE)
+        got = comp.decompress(c)
+        assert got.dtype == want.dtype and got.shape == want.shape
+        assert np.array_equal(want, got), (mode, predictor, kernel_impl,
+                                           dmk)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64],
+                         ids=["f32", "f64"])
+@pytest.mark.parametrize("predictor", ["lorenzo", "none"])
+@pytest.mark.parametrize("mode,kw", MODES, ids=[m for m, _ in MODES])
+def test_decode_impl_grid(mode, kw, predictor, dtype):
+    kind = "noise" if predictor == "none" else "smooth"
+    x = _data(kind, n=6000).astype(dtype)
+    staged, enc = _pair(mode, predictor, "jnp", **kw)
+    c = enc.compress(x)
+    _check_decode_routes(x, mode, kw, predictor,
+                         staged._decompress_staged(c), c)
+
+
+@pytest.mark.parametrize("mode,kw", MODES, ids=[m for m, _ in MODES])
+def test_decode_impl_grid_2d_lorenzo(mode, kw):
+    """Higher-rank Lorenzo decodes through the megakernel's delta
+    passthrough + the host-side multi-axis cumsum — same bytes as the
+    staged oracle on every mode."""
+    x = (_data("smooth", n=96 * 64).astype(np.float32)).reshape(96, 64)
+    staged, enc = _pair(mode, "lorenzo", "jnp", **kw)
+    c = enc.compress(x)
+    _check_decode_routes(x, mode, kw, "lorenzo",
+                         staged._decompress_staged(c), c)
+
+
+def test_unknown_decode_megakernel_raises():
+    comp = CEAZ(CEAZConfig(mode="abs", eb=1e-3, use_fused=True,
+                           decode_megakernel="warp"),
+                offline_codebook=OFFLINE)
+    c = comp.compress(np.ones(4096, np.float32))
+    with pytest.raises(ValueError, match="decode_megakernel"):
+        comp.decompress(c)
+
+
 # -- adaptive speculation -----------------------------------------------------
 
 def test_speculation_auto_is_byte_invariant():

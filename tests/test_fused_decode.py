@@ -102,12 +102,18 @@ def test_batch_shares_one_decode_pass(offline_cb, monkeypatch):
     single batched Huffman-decode launch."""
     from repro.runtime import fused_decode as FD
     calls = []
-    orig = FD._ChunkBatch.run
+    orig_split, orig_mega = FD._ChunkBatch.run, FD._ChunkBatch.run_mega
 
-    def spy(self):
+    def spy_split(self):
         calls.append(len(self.counts))
-        return orig(self)
-    monkeypatch.setattr(FD._ChunkBatch, "run", spy)
+        return orig_split(self)
+
+    def spy_mega(self):
+        calls.append(len(self.counts))
+        return orig_mega(self)
+    # one launch total, whichever decode route is configured
+    monkeypatch.setattr(FD._ChunkBatch, "run", spy_split)
+    monkeypatch.setattr(FD._ChunkBatch, "run_mega", spy_mega)
     comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
                            chunk_bytes=1 << 15),
                 offline_codebook=offline_cb)
@@ -116,6 +122,23 @@ def test_batch_shares_one_decode_pass(offline_cb, monkeypatch):
     comp.decompress_batch(comps)
     assert len(calls) == 1                 # one pass for the whole group
     assert calls[0] == sum(len(c.chunks) for c in comps)
+
+
+def test_megakernel_decode_accounts_kernel_pass(offline_cb, field):
+    """A megakernel decompress is ONE accounted ceaz_chunk_dec pass:
+    the per-(op, impl) kernel counter moves by exactly one (the same
+    dispatch.measure contract as the encode megakernel)."""
+    from repro.kernels import dispatch
+    from repro.obs import metrics as om
+    impl = dispatch.resolve_name("ceaz_chunk_dec", "auto")
+    key = om.KERNEL_CALLS + f'{{impl="{impl}",op="ceaz_chunk_dec"}}'
+    comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           chunk_bytes=1 << 15),
+                offline_codebook=offline_cb)
+    c = comp.compress(field)
+    before = om.snapshot().get(key, 0)
+    comp.decompress(c)
+    assert om.snapshot().get(key, 0) == before + 1
 
 
 def test_codebook_memoization(offline_cb, field):
