@@ -27,8 +27,8 @@ def main(argv=None) -> None:
     from . import (chi_thresholds, fixed_ratio, fused_decode,
                    fused_pipeline, kernel_microbench, offline_codewords,
                    parallel_io, ratio_distortion, roofline_report,
-                   single_pass, sort_latency, symbol_hist, throughput,
-                   update_size)
+                   serving_latency, single_pass, sort_latency,
+                   symbol_hist, throughput, update_size)
     suites = [
         ("sort_latency(Fig6/Alg1)", sort_latency.run),
         ("symbol_hist(Fig7)", symbol_hist.run),
@@ -42,6 +42,7 @@ def main(argv=None) -> None:
         ("throughput(Fig15/16,T6/T7)", throughput.run),
         ("fused_pipeline(Fig4)", fused_pipeline.run),
         ("fused_decode(Fig4-read)", fused_decode.run),
+        ("serving_latency(paging)", serving_latency.run),
         ("kernel_microbench(dispatch)", kernel_microbench.run),
         ("parallel_io(Fig17)", parallel_io.run),
         ("roofline_report(dry-run)", roofline_report.run),

@@ -1,0 +1,166 @@
+"""Serving startup + paging latency (the decode-on-demand story).
+
+The paper accelerates I/O by keeping data compressed across the slow
+boundary; serving-side the boundary is startup: a full restore decodes
+EVERY leaf before the first token, while the paged store
+(repro/serve/paging.py) opens the stream's footer index and decodes only
+the layers actually touched. This lane measures, on one synthetic
+checkpoint:
+
+  * full_restore  — `restore_serving_params` wall time (decode + cast +
+    placement of the whole tree): the startup-to-first-token floor of
+    the eager path;
+  * paged_first_touch — open the paged store + decode ONE layer: the
+    startup-to-first-token floor of the paged path (the acceptance gate
+    asserts this beats the full restore);
+  * page_hit / page_miss — steady-state cache hit vs decode-on-demand
+    page-in latency per layer;
+  * swap_stall — worst reader latency while a hot swap lands under
+    concurrent page reads, vs the undisturbed baseline (reported, not
+    gated: it is scheduler-noisy on shared runners).
+
+Emits the schema-2 ``serving`` record (nightly artifact BENCH_serving).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from .common import SIZE, emit, time_call
+
+
+def _make_checkpoint(directory: str, n_layers: int, width: int,
+                     seed: int = 0, shift: float = 0.0) -> str:
+    from repro.checkpoint import ckpt as C
+    rng = np.random.default_rng(seed)
+    state = {"params": {
+        "embed": {"table": (rng.standard_normal((width, 256)) + shift)
+                  .astype(np.float32)},
+        "layers": [{"mlp": {
+            "wi": (rng.standard_normal((256, width)) + shift)
+            .astype(np.float32),
+            "wo": (rng.standard_normal((width, 256)) + shift)
+            .astype(np.float32)}} for _ in range(n_layers)]}}
+    step = 1 if shift == 0.0 else 2
+    C.save_checkpoint(directory, state, step)
+    return os.path.join(directory, f"step_{step:08d}", C.LEAVES_STREAM)
+
+
+def run():
+    from repro.checkpoint import ckpt as C
+    from repro.launch import serve as S
+    from repro.obs import metrics as om
+    from repro.runtime.sharding import ShardingPlan
+    from repro.serve.paging import PagedParamStore
+
+    plan = ShardingPlan(mesh=None)
+    n_layers, width = (6, 512) if SIZE == "small" else (16, 2048)
+    d = tempfile.mkdtemp(prefix="bench_serving_")
+    rows = []
+    try:
+        stream = _make_checkpoint(d, n_layers, width)
+        stream2 = _make_checkpoint(d, n_layers, width, seed=0, shift=1.0)
+        comp = lambda: C._compressor(C.CheckpointConfig())
+        before = om.snapshot()
+
+        # -- startup: full restore vs paged first touch ------------------
+        time_call(                      # warm jit/compile caches once
+            lambda: S.restore_serving_params(d, plan), repeats=1)
+        _, full_restore_s = time_call(
+            lambda: S.restore_serving_params(d, plan), repeats=2)
+
+        def paged_first_touch():
+            with PagedParamStore(stream, plan=plan, comp=comp(),
+                                 prefix="params/") as st:
+                with st.pin() as pin:
+                    return pin.get("params/layers/0/mlp/wi")
+
+        paged_first_touch()                        # warm
+        _, first_touch_s = time_call(paged_first_touch, repeats=2)
+
+        # -- steady state: hit vs miss per layer -------------------------
+        store = PagedParamStore(stream, plan=plan, comp=comp(),
+                                prefix="params/")
+        keys = [k for k in store.keys() if "mlp" in k]
+        with store.pin() as pin:
+            miss_s = []
+            for k in keys:
+                t0 = time.perf_counter()
+                pin.get(k)
+                miss_s.append(time.perf_counter() - t0)
+            hit_s = []
+            for k in keys:
+                t0 = time.perf_counter()
+                pin.get(k)
+                hit_s.append(time.perf_counter() - t0)
+        page_miss_s = float(np.median(miss_s))
+        page_hit_s = float(np.median(hit_s))
+
+        # -- swap under load ---------------------------------------------
+        lat, stop = [], threading.Event()
+
+        def reader():
+            import random
+            rnd = random.Random(0)
+            while not stop.is_set():
+                k = rnd.choice(keys)
+                t0 = time.perf_counter()
+                with store.pin() as pin:
+                    pin.get(k)
+                lat.append(time.perf_counter() - t0)
+
+        th = threading.Thread(target=reader)
+        th.start()
+        time.sleep(0.3)                         # undisturbed baseline
+        baseline = list(lat)
+        t0 = time.perf_counter()
+        store.swap(stream2, comp=comp())
+        swap_s = time.perf_counter() - t0
+        time.sleep(0.2)
+        stop.set()
+        th.join()
+        store.close()
+        during = lat[len(baseline):] or [0.0]
+        base_p50 = float(np.median(baseline)) if baseline else 0.0
+        stall = float(max(during))
+
+        rows += [
+            dict(kind="startup", variant="full_restore",
+                 seconds=full_restore_s),
+            dict(kind="startup", variant="paged_first_touch",
+                 seconds=first_touch_s,
+                 speedup_vs_full=full_restore_s / max(first_touch_s,
+                                                      1e-12)),
+            dict(kind="steady", page_hit_s=page_hit_s,
+                 page_miss_s=page_miss_s,
+                 miss_over_hit=page_miss_s / max(page_hit_s, 1e-12)),
+            dict(kind="swap", swap_s=swap_s, reader_p50_s=base_p50,
+                 worst_read_during_swap_s=stall, n_reads=len(lat)),
+        ]
+        emit("serving", rows,
+             us_per_call=page_miss_s * 1e6,
+             derived=(f"first_token={first_touch_s * 1e3:.1f}ms_vs_"
+                      f"full={full_restore_s * 1e3:.1f}ms;"
+                      f"hit={page_hit_s * 1e6:.0f}us;"
+                      f"miss={page_miss_s * 1e6:.0f}us;"
+                      f"swap_stall={stall * 1e3:.1f}ms"),
+             metrics={k: v for k, v in
+                      om.diff(om.snapshot(), before).items()
+                      if "page" in k})
+        # acceptance gate: touching ONE cold layer through the paged
+        # store must beat decoding the whole tree up front
+        assert first_touch_s < full_restore_s, (
+            f"paged first touch {first_touch_s:.3f}s not faster than "
+            f"full restore {full_restore_s:.3f}s")
+        return rows
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    run()

@@ -218,7 +218,8 @@ def available_steps(directory: str):
 def restore_checkpoint(directory: str, step: Optional[int] = None,
                        plan: Optional[ShardingPlan] = None,
                        cfg: Optional[CheckpointConfig] = None,
-                       template: Any = None
+                       template: Any = None,
+                       leaf_transform=None
                        ) -> Optional[Tuple[Any, Dict]]:
     """Restore (state, meta). Falls back to earlier steps on corruption.
 
@@ -228,7 +229,12 @@ def restore_checkpoint(directory: str, step: Optional[int] = None,
     device pass each — no per-leaf host-numpy decode bounce. With
     `plan`, every leaf is device_put with the sharding derived from
     PARAM_RULES as soon as it decodes — the restore mesh may differ
-    arbitrarily from the save mesh (elastic restart)."""
+    arbitrarily from the save mesh (elastic restart).
+
+    `leaf_transform(key, arr) -> arr` runs on each decoded host leaf
+    BEFORE placement, so a serving-dtype cast happens while only that
+    one leaf exists in both precisions — never the whole tree (peak
+    restore memory stays at the target-dtype footprint)."""
     cfg = cfg or CheckpointConfig()
     steps = available_steps(directory)
     if step is not None:
@@ -239,7 +245,9 @@ def restore_checkpoint(directory: str, step: Optional[int] = None,
     sharded = plan is not None and plan.mesh is not None
 
     def place(key: str, arr):
-        """Leaf streams -> per-device placement on the restore mesh."""
+        """Per-leaf transform, then placement on the restore mesh."""
+        if leaf_transform is not None:
+            arr = leaf_transform(key, arr)
         if not sharded:
             return arr
         return jax.device_put(arr, leaf_sharding(key, np.shape(arr), plan))

@@ -272,7 +272,7 @@ class StreamReader:
 
     def __init__(self, path: str):
         self.path = path
-        self._key_to_seq: Optional[Dict[str, int]] = None
+        self._key_to_seq: Dict[str, int] = {}
         try:
             size = os.path.getsize(path)
         except OSError as e:
@@ -316,6 +316,7 @@ class StreamReader:
         self.meta: Dict = doc.get("meta", {})
         self.records: List[Dict] = doc.get("records", [])
         prev_end = len(STREAM_MAGIC)
+        key_to_seq: Dict[str, int] = {}
         for i, rec in enumerate(self.records):
             if rec.get("seq") != i:
                 raise StreamCorruptionError(
@@ -327,6 +328,18 @@ class StreamReader:
                 raise StreamCorruptionError(
                     f"{path}: record {i} offsets out of bounds/non-contiguous")
             prev_end = off + RECORD_HEADER.size + nb
+            # keys are the random-access namespace (`read_key`, the
+            # paging layer): a duplicate would silently shadow a record,
+            # so the format requires uniqueness (docs/STREAM_FORMAT.md)
+            key = rec.get("key")
+            if key in key_to_seq:
+                raise StreamCorruptionError(
+                    f"{path}: duplicate record key {key!r} at seq "
+                    f"{key_to_seq[key]} and {i} (record keys must be "
+                    "unique — key-addressed reads would silently shadow "
+                    "one of them)")
+            key_to_seq[key] = i
+        self._key_to_seq = key_to_seq
 
     def __len__(self) -> int:
         return len(self.records)
@@ -368,14 +381,17 @@ class StreamReader:
         return self.read_object(seq)
 
     def seq_of(self, key: str) -> int:
-        """Sequence number of the record stored under `key`."""
-        if self._key_to_seq is None:
-            self._key_to_seq = {rec["key"]: i
-                                for i, rec in enumerate(self.records)}
+        """Sequence number of the record stored under `key`.
+
+        The key index is built (and checked for duplicates) at open, so
+        this is a plain dict lookup. Raises a clean, unchained KeyError
+        for a missing key — the internal lookup miss is not context the
+        caller needs."""
         try:
             return self._key_to_seq[key]
         except KeyError:
-            raise KeyError(f"{self.path}: no record with key {key!r}")
+            raise KeyError(
+                f"{self.path}: no record with key {key!r}") from None
 
     def read_key(self, key: str):
         """Random access by record key (footer-index lookup)."""
@@ -400,6 +416,78 @@ class StreamReader:
 
     def __exit__(self, *exc):
         self.close()
+
+
+# ---------------------------------------------------------------------------
+# Read side: stream self-configuration (shared by the streaming read
+# engine and the decode-on-demand paging layer, repro.serve.paging)
+# ---------------------------------------------------------------------------
+
+def resolve_stream_bank(reader: StreamReader):
+    """Reconstruct + register the codebook bank a bank-mode stream
+    embeds in its footer meta (docs/CODEBOOK_BANK.md), or None for
+    exact-mode streams. Raises StreamCorruptionError on a forged or
+    unparsable artifact — never decodes against a guessed bank."""
+    from ..core.codebook import CodebookBank, register_bank
+    bank_meta = reader.meta.get("codebook_bank")
+    if bank_meta is None:
+        return None
+    try:
+        return register_bank(CodebookBank.from_meta(bank_meta))
+    except (ValueError, KeyError, TypeError) as e:
+        raise StreamCorruptionError(
+            f"{reader.path}: footer meta carries an invalid "
+            f"'codebook_bank' artifact: {e}") from e
+
+
+def default_stream_comp(reader: StreamReader, bank=None):
+    """A fused-decode CEAZ facade self-configured from a stream's footer
+    meta — the decode block grain (``block_size``) and the codebook
+    bank. Streams from writers that predate the block-size meta fall
+    back to the config default with a warning (the facade's block-count
+    check is then the only guard against a wrong grain)."""
+    from ..core import CEAZ, CEAZConfig
+    bs = reader.meta.get("block_size")
+    if bs is None:
+        bs = CEAZConfig.block_size
+        warnings.warn(
+            f"{reader.path}: stream footer meta lacks 'block_size' "
+            f"(written by a pre-block-grain writer); assuming "
+            f"the default {bs}. Pass an explicitly configured "
+            "`comp` if the stream was compressed with another "
+            "grain.", stacklevel=3)
+    return CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
+                           block_size=int(bs), codebook="auto"),
+                bank=bank)
+
+
+def check_bank_record(rec: Dict, obj) -> None:
+    """Cross-check a record's bank-id/delta index fields against the
+    payload before decode touches a codebook (tamper/corruption on the
+    cheap index metadata must not decode garbage silently)."""
+    from ..core.codebook import lookup_bank
+    bank_id = rec.get("bank_id")
+    if bank_id is None:
+        return
+    key = rec.get("key", "?")
+    try:
+        bank = lookup_bank(str(bank_id))
+    except ValueError as e:
+        raise StreamCorruptionError(
+            f"record {key!r}: unresolvable bank id {bank_id!r} "
+            f"({e})") from e
+    delta = rec.get("bank_delta")
+    chunk_sel = [int(getattr(ch, "bank_index", -1))
+                 for ch in obj.chunks]
+    if delta is not None:
+        if [int(d) for d in delta] != chunk_sel:
+            raise StreamCorruptionError(
+                f"record {key!r}: bank_delta does not match the "
+                f"payload's per-chunk bank selections")
+        if any(int(d) >= bank.n_books for d in delta):
+            raise StreamCorruptionError(
+                f"record {key!r}: bank_delta indexes past the "
+                f"bank's {bank.n_books} books")
 
 
 # ---------------------------------------------------------------------------
@@ -540,40 +628,17 @@ class AsyncDecodeReadEngine:
 
     def __init__(self, path: str, comp=None, *, group: int = 8,
                  max_inflight: int = 2, sync: bool = False):
-        from ..core import CEAZ, CEAZConfig
-        from ..core.codebook import CodebookBank, register_bank
         self._reader = StreamReader(path)   # validates trailer/footer/index
-        # bank-mode streams carry the bank artifact in the footer meta;
-        # reconstruct + register it so decode resolves bank-coded chunks
-        # without the trained artifact on disk (docs/CODEBOOK_BANK.md)
-        self._bank = None
-        bank_meta = self._reader.meta.get("codebook_bank")
-        if bank_meta is not None:
-            try:
-                self._bank = register_bank(CodebookBank.from_meta(bank_meta))
-            except (ValueError, KeyError, TypeError) as e:
-                self._reader.close()
-                raise StreamCorruptionError(
-                    f"{path}: footer meta carries an invalid "
-                    f"'codebook_bank' artifact: {e}") from e
-        if comp is None:
-            # decode needs the encoder's block grain; self-describing
-            # streams record it in the footer meta. Streams from writers
-            # that predate the meta (pre-PR-3) fall back to the config
-            # default — loudly, because a wrong grain on a non-default
-            # stream is caught only by the facade's block-count check.
-            bs = self._reader.meta.get("block_size")
-            if bs is None:
-                bs = CEAZConfig.block_size
-                warnings.warn(
-                    f"{path}: stream footer meta lacks 'block_size' "
-                    f"(written by a pre-block-grain writer); assuming "
-                    f"the default {bs}. Pass an explicitly configured "
-                    "`comp` if the stream was compressed with another "
-                    "grain.", stacklevel=2)
-            comp = CEAZ(CEAZConfig(mode="rel", eb=1e-4, use_fused=True,
-                                   block_size=int(bs), codebook="auto"),
-                        bank=self._bank)
+        try:
+            # bank-mode streams carry the bank artifact in the footer
+            # meta; reconstruct + register it so decode resolves
+            # bank-coded chunks without the trained artifact on disk
+            self._bank = resolve_stream_bank(self._reader)
+            if comp is None:
+                comp = default_stream_comp(self._reader, self._bank)
+        except BaseException:
+            self._reader.close()
+            raise
         self._comp = comp
         self._group = max(1, group)
         self._sync = sync
@@ -634,33 +699,8 @@ class AsyncDecodeReadEngine:
         except BaseException as e:              # surfaced on the consumer
             self._put(("__error__", e))
 
-    def _check_bank_record(self, rec: Dict, obj) -> None:
-        """Cross-check a record's bank-id/delta index fields against the
-        payload before decode touches a codebook (tamper/corruption on
-        the cheap index metadata must not decode garbage silently)."""
-        from ..core.codebook import lookup_bank
-        bank_id = rec.get("bank_id")
-        if bank_id is None:
-            return
-        key = rec.get("key", "?")
-        try:
-            bank = lookup_bank(str(bank_id))
-        except ValueError as e:
-            raise StreamCorruptionError(
-                f"record {key!r}: unresolvable bank id {bank_id!r} "
-                f"({e})") from e
-        delta = rec.get("bank_delta")
-        chunk_sel = [int(getattr(ch, "bank_index", -1))
-                     for ch in obj.chunks]
-        if delta is not None:
-            if [int(d) for d in delta] != chunk_sel:
-                raise StreamCorruptionError(
-                    f"record {key!r}: bank_delta does not match the "
-                    f"payload's per-chunk bank selections")
-            if any(int(d) >= bank.n_books for d in delta):
-                raise StreamCorruptionError(
-                    f"record {key!r}: bank_delta indexes past the "
-                    f"bank's {bank.n_books} books")
+    # shared with the paging layer: module-level check_bank_record
+    _check_bank_record = staticmethod(check_bank_record)
 
     @staticmethod
     def _tag_record(e: BaseException, rec: Dict) -> BaseException:

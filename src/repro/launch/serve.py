@@ -9,6 +9,8 @@ jointly and batch stays replicated — all 256 chips hold context slices.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -88,36 +90,110 @@ def cache_shardings(cache, plan: ShardingPlan, batch_sharded: bool = True):
         lambda p, l: NamedSharding(plan.mesh, leaf_spec(p, l)), cache)
 
 
+def _serving_cast(dtype):
+    """Per-leaf host-side cast to the serving dtype: applied BEFORE
+    device placement so only one leaf ever exists in both precisions —
+    startup peak HBM is the serving (bf16) footprint, not f32+bf16."""
+    np_dtype = np.dtype(dtype)
+
+    def cast(key, arr):
+        if isinstance(arr, np.ndarray) \
+                and jnp.issubdtype(arr.dtype, jnp.floating) \
+                and arr.dtype != np_dtype:
+            return arr.astype(np_dtype)
+        return arr
+    return cast
+
+
+def _serving_step_dir(directory: str, step: Optional[int]):
+    """(step_dir, step) of the newest usable checkpoint (or `step`)."""
+    from ..checkpoint import ckpt as C
+    steps = C.available_steps(directory)
+    if step is not None:
+        steps = [s for s in steps if s == step]
+    if not steps:
+        return None
+    s = steps[-1]
+    return os.path.join(directory, f"step_{s:08d}"), s
+
+
 def restore_serving_params(directory: str, plan: ShardingPlan,
                            step: Optional[int] = None, ckpt_cfg=None,
-                           dtype=jnp.bfloat16):
+                           dtype=jnp.bfloat16, paged: bool = False,
+                           **paged_kw):
     """Startup restore for serving: checkpoint leaf stream -> engine-fed
     fused decode -> serving-dtype cast -> placement on the serve mesh.
 
     Leaf records stream through the read engine (prefetch thread +
-    batched fused device decode, no host-numpy decode bounce) and every
-    leaf is placed with its PARAM_RULES sharding as it decodes — the
-    serve mesh may differ arbitrarily from the training mesh. Float
-    params are cast to `dtype` (bf16 by default: serving re-reading f32
-    masters doubles parameter HBM traffic, see `serving_params_struct`).
-    Returns (params, meta) or None when no usable checkpoint exists.
+    batched fused device decode, no host-numpy decode bounce); the cast
+    to `dtype` (bf16 by default: serving re-reading f32 masters doubles
+    parameter HBM traffic, see `serving_params_struct`) is fused into
+    the per-leaf decode->placement path, and every leaf is placed with
+    its PARAM_RULES sharding as it decodes — the serve mesh may differ
+    arbitrarily from the training mesh.
+
+    With `paged=True` the full restore is skipped entirely: returns
+    ``(PagedParamStore, meta)`` — the compressed stream stays resident
+    and layers decode on first touch (see `paged_serving_store`, which
+    also takes `paged_kw` like ``cache_bytes``). Otherwise returns
+    (params, meta). None when no usable checkpoint exists.
     """
+    if paged:
+        return paged_serving_store(directory, plan, step=step,
+                                   ckpt_cfg=ckpt_cfg, dtype=dtype,
+                                   **paged_kw)
     from ..checkpoint import ckpt as C
     restored = C.restore_checkpoint(directory, step=step, plan=plan,
-                                    cfg=ckpt_cfg)
+                                    cfg=ckpt_cfg,
+                                    leaf_transform=_serving_cast(dtype))
     if restored is None:
         return None
     state, meta = restored
     params = (state["params"] if isinstance(state, dict)
               and "params" in state else state)
+    # mesh-less restores stay host-side numpy through the transform
+    # path; normalize to jax arrays (already serving dtype — no second
+    # full-precision materialization)
+    return jax.tree.map(jnp.asarray, params), meta
 
-    def cast(leaf):
-        arr = jnp.asarray(leaf)
-        if jnp.issubdtype(arr.dtype, jnp.floating):
-            return arr.astype(dtype)
-        return arr
 
-    return jax.tree.map(cast, params), meta
+def paged_serving_store(directory: str, plan: ShardingPlan,
+                        step: Optional[int] = None, ckpt_cfg=None,
+                        dtype=jnp.bfloat16, **paged_kw):
+    """Open the newest usable checkpoint as a decode-on-demand
+    :class:`~repro.serve.paging.PagedParamStore` (compressed-resident
+    weights; layers decode on first touch with the serving-dtype cast
+    and PARAM_RULES placement fused in). Extra `paged_kw` forward to
+    the store (``cache_bytes``, ``group``, ...).
+
+    Returns (store, meta) or None when no usable checkpoint exists.
+    The store's decode facade mirrors `restore_checkpoint`'s compressor
+    config, so paged leaves are bit-identical to a full restore.
+    """
+    from ..checkpoint import ckpt as C
+    from ..serve.paging import PagedParamStore
+    found = _serving_step_dir(directory, step)
+    if found is None:
+        return None
+    d, s = found
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("format", 1) < 2:
+            raise ValueError("paged serving needs a format-2 leaf stream")
+        stream = os.path.join(d, manifest.get("file", C.LEAVES_STREAM))
+        cfg = ckpt_cfg or C.CheckpointConfig()
+        keys = list(manifest.get("leaves", {}))
+        prefix = "params/" if any(
+            k.startswith("params/") for k in keys) else None
+        store = PagedParamStore(stream, plan=plan, dtype=dtype,
+                                comp=C._compressor(cfg), prefix=prefix,
+                                **paged_kw)
+    except Exception as e:
+        print(f"checkpoint {d} unusable for paged serving ({e})")
+        return None
+    return store, {"step": manifest.get("step", s),
+                   **manifest.get("extra", {})}
 
 
 def serving_params_struct(model_cfg):

@@ -41,6 +41,7 @@ __all__ = [
     "BANK_DRIFT",
     "BANK_FALLBACKS", "BANK_REPACKS", "QUEUE_DEPTH", "CORRUPTION",
     "KERNEL_CALLS", "KERNEL_SECONDS",
+    "PAGE_HITS", "PAGE_MISSES", "PAGE_EVICTIONS", "PAGE_CACHE_BYTES",
 ]
 
 # -- canonical metric names ---------------------------------------------------
@@ -65,6 +66,11 @@ CORRUPTION = "ceaz_stream_corruption_total"        # StreamCorruptionError raise
 # kernel dispatch (kernels/dispatch.py), labels: op=, impl=
 KERNEL_CALLS = "ceaz_kernel_calls_total"
 KERNEL_SECONDS = "ceaz_kernel_pass_seconds"        # histogram; opt-in timing
+# decode-on-demand parameter paging (serve/paging.py)
+PAGE_HITS = "ceaz_page_hits_total"                 # cache hits (layer reads)
+PAGE_MISSES = "ceaz_page_misses_total"             # decode-on-demand page-ins
+PAGE_EVICTIONS = "ceaz_page_evictions_total"       # LRU evictions
+PAGE_CACHE_BYTES = "ceaz_page_cache_bytes"         # gauge: decoded-resident
 
 _LabelKey = Tuple[Tuple[str, str], ...]
 
@@ -256,6 +262,7 @@ class MetricsRegistry:
 
         raw, stored = val(RAW_BYTES), val(STORED_BYTES)
         hits, misses = val(SPEC_HITS), val(SPEC_MISSES)
+        page_hits, page_misses = val(PAGE_HITS), val(PAGE_MISSES)
         return {
             "chunks": val(CHUNKS),
             "raw_bytes": raw,
@@ -268,6 +275,8 @@ class MetricsRegistry:
             "bank_exact_fallbacks": val(BANK_FALLBACKS),
             "bank_overflow_repacks": val(BANK_REPACKS),
             "stream_corruption": val(CORRUPTION),
+            "page_hit_rate": _ratio(page_hits, page_hits + page_misses),
+            "page_evictions": val(PAGE_EVICTIONS),
         }
 
     def reset(self) -> None:

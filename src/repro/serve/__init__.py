@@ -1,0 +1,11 @@
+"""Serving-side runtime: compressed-resident parameter paging.
+
+`repro.launch.serve` owns the jit'd prefill/decode entry points; this
+package owns how their parameters get into device memory — the
+decode-on-demand :class:`~repro.serve.paging.PagedParamStore` that keeps
+a ``.ceazs`` checkpoint stream as the resident format and pages layers
+through the fused decode path on first touch.
+"""
+from .paging import PagedParamStore, PinnedParams
+
+__all__ = ["PagedParamStore", "PinnedParams"]

@@ -20,6 +20,9 @@ def test_readme_links_normative_docs():
     assert "(docs/ARCHITECTURE.md)" in text
     assert "(docs/STREAM_FORMAT.md)" in text
     assert "(docs/OBSERVABILITY.md)" in text
+    # serving quickstart links straight into the paging/hot-swap section
+    assert ("(docs/ARCHITECTURE.md#serving-decode-on-demand-paging-"
+            "and-hot-swap)") in text
 
 
 def test_slugify_matches_github_style():

@@ -277,6 +277,55 @@ def test_read_seq_random_access(tmp_path, shards):
             r.seq_of("no_such_key")
 
 
+def test_random_access_out_of_range_and_missing_key(tmp_path):
+    """Satellite: paging makes seq/key lookups the hot path — the edges
+    must fail with clean, typed errors, not silent wraparound (negative
+    seqs index from the end in plain lists) or chained internals."""
+    path = _good_stream(tmp_path)
+    with E.StreamReader(path) as r:
+        for bad in (-1, len(r), len(r) + 7):
+            with pytest.raises(IndexError, match="out of range"):
+                r.read_seq(bad)
+        with pytest.raises(KeyError) as ei:
+            r.seq_of("no_such_key")
+        # `raise ... from None`: the internal dict miss is suppressed,
+        # the user-facing KeyError is the whole story
+        assert ei.value.__suppress_context__
+        assert "no_such_key" in str(ei.value)
+        with pytest.raises(KeyError):
+            r.read_key("no_such_key")
+
+
+def test_duplicate_record_key_fails_at_open(tmp_path):
+    """Satellite bugfix fence: duplicate keys used to silently map to
+    the LAST record via dict-comprehension overwrite — key-addressed
+    reads (the paging layer) would shadow a record. The format requires
+    unique keys; the reader must refuse the stream at open."""
+    path = str(tmp_path / "dup.ceazs")
+    w = E.StreamWriter(path, fsync=False)
+    w.append("k", b"alpha" * 8, {"codec": "raw"})
+    w.append("unique", b"bravo" * 8, {"codec": "raw"})
+    w.append("k", b"charlie" * 8, {"codec": "raw"})
+    w.close()
+    with pytest.raises(E.StreamCorruptionError,
+                       match="duplicate record key"):
+        E.StreamReader(path)
+
+
+def test_footer_index_truncation_fails_at_open(tmp_path):
+    """Cuts inside the footer index or trailer (the random-access
+    lookup structures) must be caught by open-time validation."""
+    path = _good_stream(tmp_path)
+    data = open(path, "rb").read()
+    foot_off, foot_len, _, _ = E.TRAILER.unpack(data[-E.TRAILER.size:])
+    for cut in (foot_off,                         # index gone entirely
+                foot_off + foot_len // 2,         # mid-index
+                len(data) - E.TRAILER.size // 2):  # mid-trailer
+        open(path, "wb").write(data[:cut])
+        with pytest.raises(E.StreamCorruptionError):
+            E.StreamReader(path)
+
+
 def test_read_engine_abandoned_close_is_prompt(tmp_path, shards):
     """Closing without draining must not stall: the prefetch thread's
     sentinel put backs off when the consumer goes away."""
@@ -539,6 +588,14 @@ def _decode_verdicts(path):
 def _apply_corpus_case(data, records, case):
     """One corpus entry -> mutated stream bytes (record-relative offsets
     keep the corpus valid across encoder byte-layout drift)."""
+    if case["kind"] == "truncate_index":
+        # cuts inside the footer index / trailer — positions computed
+        # from the live trailer so the corpus survives layout drift
+        foot_off, foot_len, _, _ = E.TRAILER.unpack(
+            data[-E.TRAILER.size:])
+        cut = {"mid_footer": foot_off + foot_len // 2,
+               "mid_trailer": len(data) - E.TRAILER.size // 2}[case["at"]]
+        return data[:cut]
     rec = records[case["record"] % len(records)]
     body = rec["offset"] + E.RECORD_HEADER.size
     if case["kind"] == "bitflip":

@@ -24,8 +24,12 @@ from typing import Dict, List, Set
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
 FENCE_RE = re.compile(r"^(```|~~~)")
-REQUIRED_README_LINKS = ("docs/ARCHITECTURE.md", "docs/STREAM_FORMAT.md",
-                         "docs/OBSERVABILITY.md")
+REQUIRED_README_LINKS = (
+    "docs/ARCHITECTURE.md", "docs/STREAM_FORMAT.md",
+    "docs/OBSERVABILITY.md",
+    # the serving quickstart must point at the paging/hot-swap dataflow
+    "docs/ARCHITECTURE.md#serving-decode-on-demand-paging-and-hot-swap",
+)
 
 
 def slugify(heading: str) -> str:
